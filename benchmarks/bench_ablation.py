@@ -1,0 +1,26 @@
+"""Paper Fig. 11: ablations -- BAMG vs w/o nav graph vs w/o BMRNG prune."""
+from . import common
+
+
+def run(regime: str = "sift-like") -> None:
+    full = common.default_bamg(regime)
+    sw = common.sweep(full, regime, ls=(48,))
+    common.emit(f"fig11_abl.{regime}.full", round(sw[0][2], 2),
+                f"recall={sw[0][1]:.3f};qps={sw[0][3]:.0f}")
+    # w/o NG: random entries
+    sw = common.sweep(full, regime, ls=(48,), random_entry=True)
+    common.emit(f"fig11_abl.{regime}.wo_ng", round(sw[0][2], 2),
+                f"recall={sw[0][1]:.3f};qps={sw[0][3]:.0f}")
+    # w/o BMRNG pruning
+    nop = common.bamg_index(regime, use_prune=False)
+    sw = common.sweep(nop, regime, ls=(48,))
+    common.emit(f"fig11_abl.{regime}.wo_bmrng", round(sw[0][2], 2),
+                f"recall={sw[0][1]:.3f};qps={sw[0][3]:.0f}")
+    # beyond-paper: early-stop rerank
+    sw = common.sweep(full, regime, ls=(48,), rerank_margin=1.3)
+    common.emit(f"fig11_abl.{regime}.early_stop_rerank", round(sw[0][2], 2),
+                f"recall={sw[0][1]:.3f};qps={sw[0][3]:.0f}")
+
+
+if __name__ == "__main__":
+    run()

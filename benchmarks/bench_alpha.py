@@ -1,0 +1,17 @@
+"""Paper Fig. 8: effect of alpha (intra-block path bound, build + search)."""
+from . import common
+
+
+def run(regime: str = "sift-like", alphas=(1, 2, 3, 5)) -> None:
+    for a in alphas:
+        idx = common.bamg_index(regime, alpha=a)
+        sw = common.sweep(idx, regime, ls=(48,))
+        l, recall, nio, qps, g, v = sw[0]
+        deg = idx.degree_stats()
+        common.emit(f"fig8_alpha.{regime}.a{a}", round(nio, 2),
+                    f"recall={recall:.3f};qps={qps:.0f};"
+                    f"deg={deg['total']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,18 @@
+"""Paper Fig. 9: effect of beta (pruning closeness margin)."""
+from . import common
+
+
+def run(regime: str = "sift-like",
+        betas=(1.0, 1.05, 1.1, 1.15, 1.2)) -> None:
+    for b in betas:
+        idx = common.bamg_index(regime, beta=b)
+        sw = common.sweep(idx, regime, ls=(48,))
+        l, recall, nio, qps, g, v = sw[0]
+        deg = idx.degree_stats()
+        common.emit(f"fig9_beta.{regime}.b{b:.2f}", round(nio, 2),
+                    f"recall={recall:.3f};qps={qps:.0f};"
+                    f"deg={deg['total']:.1f};cross={deg['cross']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Paper Table 2: intra / cross / total average out-degrees."""
+from . import common
+
+
+def run(regimes=("sift-like", "gist-like")) -> None:
+    for regime in regimes:
+        for name, idx in (("bamg", common.default_bamg(regime)),
+                          ("starling", common.starling_index(regime))):
+            d = idx.degree_stats()
+            common.emit(f"table2_deg.{regime}.{name}", round(d["total"], 2),
+                        f"in={d['intra']:.2f};out={d['cross']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 6 + 7: indexing time and index size."""
+import time
+
+from . import common
+
+
+def run(regimes=("sift-like",)) -> None:
+    for regime in regimes:
+        b = common.base_graphs(regime)
+        t0 = time.time()
+        idx = common.bamg_index(regime)
+        t_refine = time.time() - t0
+        t_bamg = b["t"]["nsg"] + b["t"]["bnf"] + b["t"]["pq"] + t_refine
+        common.emit(f"fig6_time.{regime}.bamg", round(t_bamg, 1),
+                    f"nsg={b['t']['nsg']:.1f};bnf={b['t']['bnf']:.1f};"
+                    f"refine+nav={t_refine:.1f};s")
+        common.emit(f"fig6_time.{regime}.vamana_base",
+                    round(b["t"]["vamana"], 1), "s (diskann/starling graph)")
+        common.emit(f"fig7_size.{regime}.bamg",
+                    round(idx.index_bytes() / 2 ** 20, 2),
+                    f"graph={idx.store.graph_bytes/2**20:.1f}MiB;"
+                    f"vec={idx.store.vector_bytes/2**20:.1f}MiB")
+        common.emit(f"fig7_size.{regime}.starling",
+                    round(common.starling_index(regime).index_bytes() / 2 ** 20, 2),
+                    "MiB coupled")
+        common.emit(f"fig7_size.{regime}.diskann",
+                    round(common.diskann_index(regime).index_bytes() / 2 ** 20, 2),
+                    "MiB coupled")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks (CPU wall time of the jnp reference backend;
+the Pallas TPU path is validated in interpret mode by tests/test_kernels)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.l2_topk import l2_topk
+from repro.kernels.pq_adc import pq_adc
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    tables = jnp.asarray(rng.random((8, 16, 256)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 256, (65536, 16)), jnp.uint8)
+    us = _time(lambda t, c: pq_adc(t, c, backend="ref"), tables, codes)
+    common.emit("kernel.pq_adc.b8xn65536", round(us, 1),
+                f"gflops={8*65536*16*2/us/1e3:.1f}")
+
+    q = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    base = jnp.asarray(rng.normal(size=(100_000, 128)), jnp.float32)
+    us = _time(lambda a, b: l2_topk(a, b, 100, backend="ref"), q, base)
+    common.emit("kernel.l2_topk.b8xn100k", round(us, 1),
+                f"gflops={2*8*100_000*128/us/1e3:.1f}")
+
+    qq = jnp.asarray(rng.normal(size=(4, 32, 128)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(4, 8192, 8, 128)), jnp.bfloat16)
+    vv = jnp.asarray(rng.normal(size=(4, 8192, 8, 128)), jnp.bfloat16)
+    lens = jnp.full((4,), 8192, jnp.int32)
+    us = _time(lambda a, b, c, d: flash_decode(a, b, c, d, backend="ref"),
+               qq, kk, vv, lens)
+    common.emit("kernel.flash_decode.b4s8192", round(us, 1),
+                f"gbps={(kk.nbytes+vv.nbytes)/us/1e3:.1f}")
+
+
+if __name__ == "__main__":
+    run()

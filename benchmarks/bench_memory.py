@@ -1,0 +1,15 @@
+"""Paper Fig. 10: in-memory footprint (PQ codes + nav structures)."""
+from . import common
+
+
+def run(regimes=("sift-like",)) -> None:
+    for regime in regimes:
+        for name, idx in (("bamg", common.default_bamg(regime)),
+                          ("starling", common.starling_index(regime)),
+                          ("diskann", common.diskann_index(regime))):
+            common.emit(f"fig10_mem.{regime}.{name}",
+                        round(idx.memory_bytes() / 2 ** 20, 3), "MiB")
+
+
+if __name__ == "__main__":
+    run()

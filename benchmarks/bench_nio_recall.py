@@ -1,0 +1,32 @@
+"""Paper Fig. 5: NIO (exact block reads per query) vs recall."""
+from . import common
+
+
+def _interp_nio_at(sw, target_recall):
+    """NIO of the cheapest l reaching target recall (None if unreachable)."""
+    ok = [r for r in sw if r[1] >= target_recall]
+    return min(ok, key=lambda r: r[2])[2] if ok else None
+
+
+def run(regimes=("sift-like", "gist-like")) -> None:
+    for regime in regimes:
+        sw_b = common.sweep(common.default_bamg(regime), regime)
+        sw_s = common.sweep(common.starling_index(regime), regime)
+        sw_d = common.sweep(common.diskann_index(regime), regime)
+        for method, sw in (("bamg", sw_b), ("starling", sw_s),
+                           ("diskann", sw_d)):
+            for (l, recall, nio, qps, g, v) in sw:
+                common.emit(f"fig5_nio.{regime}.{method}.l{l}", round(nio, 2),
+                            f"recall={recall:.3f};graph={g:.1f};vec={v:.1f}")
+        # NIO reduction vs Starling at matched recall
+        for target in (0.8, 0.9):
+            nb = _interp_nio_at(sw_b, target)
+            ns = _interp_nio_at(sw_s, target)
+            if nb and ns:
+                common.emit(f"fig5_nio.{regime}.reduction_at_{target}",
+                            round(100 * (1 - nb / ns), 1),
+                            f"bamg={nb:.1f};starling={ns:.1f};pct")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 4: QPS vs recall for BAMG / Starling / DiskANN.
+
+QPS is the simulator's calibrated cost model (NIO x SSD read latency +
+distance compute); NIO itself is exact -- see bench_nio_recall.py.
+"""
+from . import common
+
+
+def run(regimes=("sift-like", "gist-like")) -> None:
+    for regime in regimes:
+        rows = {}
+        rows["bamg"] = common.sweep(common.default_bamg(regime), regime)
+        rows["starling"] = common.sweep(common.starling_index(regime), regime)
+        rows["diskann"] = common.sweep(common.diskann_index(regime), regime)
+        for method, sw in rows.items():
+            for (l, recall, nio, qps, g, v) in sw:
+                common.emit(f"fig4_qps.{regime}.{method}.l{l}",
+                            round(1e6 / max(qps, 1e-9), 2),
+                            f"recall={recall:.3f};qps={qps:.0f}")
+        # headline: QPS ratio vs Starling at the best shared recall band
+        b = max(rows["bamg"], key=lambda r: r[1])
+        s = max(rows["starling"], key=lambda r: r[1])
+        common.emit(f"fig4_qps.{regime}.bamg_vs_starling_best",
+                    round(b[3] / max(s[3], 1e-9), 3),
+                    f"bamg_recall={b[1]:.3f};starling_recall={s[1]:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Roofline summary from the dry-run artifact (deliverable g).
+
+Reads dryrun_results.json (produced by `python -m repro.launch.dryrun`) and
+emits one row per (arch x shape x mesh) with the three roofline terms.
+Skipped gracefully when the dry-run has not been executed yet.
+"""
+import json
+import os
+
+from . import common
+
+
+def run(path: str = "dryrun_results.json") -> None:
+    if not os.path.exists(path):
+        common.emit("roofline.skipped", 0, f"no {path}; run repro.launch.dryrun")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok":
+            common.emit(f"roofline.{key}.FAILED", -1,
+                        rec.get("error", "")[:80])
+            continue
+        rl = rec["roofline"]
+        mem = rec["mem"]["total_bytes"] / 2 ** 30
+        common.emit(
+            f"roofline.{key}", round(rl["t_bound_s"] * 1e6, 1),
+            f"bneck={rl['bottleneck']};mfu={rl['mfu_bound']:.3f};"
+            f"useful={rl['useful_ratio']:.2f};mem={mem:.1f}GiB;"
+            f"fits={rec['mem']['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,124 @@
+"""Shared benchmark substrate: datasets + cached index builds.
+
+Sizes are tuned for the single-core CPU container (REPRO_BENCH_N scales
+them).  The expensive base-graph construction (NSG / Vamana) and the block
+assignment are cached per dataset regime, so the alpha/beta sweeps (which
+only re-run the linear-time BAMG refinement) stay cheap.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.bamg import build_bamg_from  # noqa: E402
+from repro.core.block_assign import bnf_blocks  # noqa: E402
+from repro.core.engine import (BAMGIndex, BAMGParams, DiskANNIndex,  # noqa: E402
+                               DiskANNParams, StarlingIndex, StarlingParams,
+                               _pick_pq_m)
+from repro.core.graph_build import build_nsg, build_vamana  # noqa: E402
+from repro.core.navgraph import build_navgraph  # noqa: E402
+from repro.core.pq import train_pq  # noqa: E402
+from repro.core.storage import DecoupledStorage, max_capacity_for  # noqa: E402
+from repro.data.synthetic import PAPER_REGIMES, make_vector_dataset  # noqa: E402
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "4000"))
+BENCH_NQ = int(os.environ.get("REPRO_BENCH_NQ", "30"))
+R = 24
+L_BUILD = 48
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(regime: str):
+    cfg = PAPER_REGIMES[regime]
+    return make_vector_dataset(regime, BENCH_N, cfg["d"], BENCH_NQ,
+                               k_gt=100, n_clusters=cfg["n_clusters"], seed=0)
+
+
+@functools.lru_cache(maxsize=None)
+def base_graphs(regime: str):
+    """(nsg_adj, nsg_entry, blocks, vamana_adj, vamana_entry, codec, codes,
+    build timings) -- cached across benchmarks."""
+    ds = dataset(regime)
+    x = ds.base
+    t0 = time.time()
+    nsg_adj, nsg_entry = build_nsg(x, r=R, l_build=L_BUILD, knn_k=R)
+    t_nsg = time.time() - t0
+    cap = max_capacity_for(R)
+    t0 = time.time()
+    blocks = bnf_blocks(nsg_adj, cap, seed=0)
+    t_bnf = time.time() - t0
+    t0 = time.time()
+    vam_adj, vam_entry = build_vamana(x, r=R, l_build=L_BUILD)
+    t_vam = time.time() - t0
+    t0 = time.time()
+    codec = train_pq(x, m=_pick_pq_m(x.shape[1]), seed=0)
+    codes = codec.encode(x)
+    t_pq = time.time() - t0
+    return dict(nsg=(nsg_adj, nsg_entry), blocks=blocks, cap=cap,
+                vamana=(vam_adj, vam_entry), codec=codec, codes=codes,
+                t=dict(nsg=t_nsg, bnf=t_bnf, vamana=t_vam, pq=t_pq))
+
+
+def bamg_index(regime: str, alpha: int = 3, beta: float = 1.05,
+               use_nav: bool = True, use_prune: bool = True) -> BAMGIndex:
+    """BAMG from the cached base NSG (linear-time refinement only)."""
+    ds = dataset(regime)
+    b = base_graphs(regime)
+    nsg_adj, entry = b["nsg"]
+    if use_prune:
+        graph = build_bamg_from(ds.base, nsg_adj, entry, b["blocks"],
+                                b["cap"], alpha=alpha, beta=beta,
+                                max_degree=R)
+    else:
+        from repro.core.bamg import BAMGGraph
+        from repro.core.block_assign import block_members
+        graph = BAMGGraph(adj=nsg_adj, blocks=np.asarray(b["blocks"], np.int32),
+                          members=block_members(b["blocks"], b["cap"]),
+                          entry=entry, capacity=b["cap"], alpha=alpha,
+                          beta=beta)
+    store = DecoupledStorage(ds.base, graph.adj, graph.blocks, graph.members)
+    nav = build_navgraph(ds.base, graph, alpha=alpha, beta=beta,
+                         gamma=128, capacity=b["cap"]) if use_nav else None
+    params = BAMGParams(alpha=alpha, beta=beta, r=R, use_nav=use_nav,
+                        use_bmrng_prune=use_prune)
+    return BAMGIndex(ds.base, graph, b["codec"], b["codes"], store, nav,
+                     params)
+
+
+@functools.lru_cache(maxsize=None)
+def starling_index(regime: str) -> StarlingIndex:
+    ds = dataset(regime)
+    return StarlingIndex.build(ds.base, StarlingParams(r=R, l_build=L_BUILD))
+
+
+@functools.lru_cache(maxsize=None)
+def diskann_index(regime: str) -> DiskANNIndex:
+    ds = dataset(regime)
+    return DiskANNIndex.build(ds.base, DiskANNParams(r=R, l_build=L_BUILD))
+
+
+@functools.lru_cache(maxsize=None)
+def default_bamg(regime: str) -> BAMGIndex:
+    return bamg_index(regime)
+
+
+def sweep(idx, regime: str, ls=(12, 24, 48, 96), k: int = 10, **kw):
+    """[(l, recall, nio, qps, graph_reads, vector_reads)] over pool sizes."""
+    ds = dataset(regime)
+    out = []
+    for l in ls:
+        st = idx.search_batch(ds.queries, k=k, l=l, gt=ds.gt, **kw)
+        out.append((l, st.recall, st.mean_nio, st.qps,
+                    st.mean_graph_reads, st.mean_vector_reads))
+    return out
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """CSV row in the harness convention: name,us_per_call,derived."""
+    print(f"{name},{value},{derived}")

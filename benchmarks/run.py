@@ -1,0 +1,55 @@
+"""Run every benchmark; print ``name,value,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2]
+
+One module per paper table/figure (DESIGN.md §6).  REPRO_BENCH_N scales
+corpus sizes (default 4000 -- single-core-CPU friendly).
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (bench_ablation, bench_alpha, bench_beta, bench_degrees,
+                   bench_indexing, bench_kernels, bench_memory,
+                   bench_nio_recall, bench_qps_recall, bench_roofline)
+
+    suites = [
+        ("fig4", bench_qps_recall.run),
+        ("fig5", bench_nio_recall.run),
+        ("fig6_7", bench_indexing.run),
+        ("fig8", bench_alpha.run),
+        ("fig9", bench_beta.run),
+        ("fig10", bench_memory.run),
+        ("table2", bench_degrees.run),
+        ("fig11", bench_ablation.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", bench_roofline.run),
+    ]
+    only = [s for s in args.only.split(",") if s]
+    print("name,value,derived")
+    failures = 0
+    for name, fn in suites:
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"bench.{name}.wall_s,{time.time()-t0:.1f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"bench.{name}.wall_s,{time.time()-t0:.1f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: BAMG (Block-Aware Monotonic Graph) disk-ANN framework in JAX.
+
+Reproduction + beyond-paper optimization of:
+  Li & Xu, "BAMG: A Block-Aware Monotonic Graph Index for Disk-Based
+  Approximate Nearest Neighbor Search" (2025).
+
+Public entry points:
+  repro.core.engine.BAMGIndex     -- build / save / load / search
+  repro.configs.registry          -- assigned architecture configs
+  repro.launch.dryrun             -- multi-pod dry-run driver
+"""
+
+__version__ = "1.0.0"

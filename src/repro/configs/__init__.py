@@ -1,0 +1,2 @@
+"""Assigned-architecture configs + registry (one module per arch)."""
+from .registry import ARCHS, get_arch  # noqa: F401

@@ -1,0 +1,25 @@
+"""Architecture registry: --arch <id> resolution for every launcher."""
+from __future__ import annotations
+
+from . import (din_cfg, dimenet_cfg, gemma_7b, graphcast_cfg,
+               h2o_danube3_4b, mace_cfg, moonshot_v1_16b_a3b, nequip_cfg,
+               olmo_1b, qwen2_moe_a2_7b)
+
+ARCHS = {m.ARCH_ID: m for m in (
+    h2o_danube3_4b, gemma_7b, olmo_1b, qwen2_moe_a2_7b, moonshot_v1_16b_a3b,
+    graphcast_cfg, nequip_cfg, mace_cfg, dimenet_cfg, din_cfg)}
+
+
+def get_arch(arch_id: str):
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells():
+    """Every (arch_id, shape_name) pair -- the 40 dry-run cells."""
+    out = []
+    for aid, mod in ARCHS.items():
+        for sname in mod.SHAPES:
+            out.append((aid, sname))
+    return out

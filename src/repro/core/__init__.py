@@ -1,0 +1,1 @@
+"""Paper core: BMRNG/BAMG graph construction, storage layout, search."""

@@ -1,0 +1,67 @@
+"""Batched / chunked distance computation and exact kNN.
+
+All distances are SQUARED Euclidean unless noted -- monotone with L2, so
+every lune / occlusion / ordering test in the paper is unchanged, and we
+avoid sqrt everywhere (matches standard ANN practice, e.g. faiss).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _sq_l2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(na,d),(nb,d) -> (na,nb) squared L2 via the expanded form (MXU-friendly)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True)
+    d = a2 + b2.T - 2.0 * (a @ b.T)
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_sq_l2(a, b) -> np.ndarray:
+    return np.asarray(_sq_l2(jnp.asarray(a), jnp.asarray(b)))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _knn_chunk(q: jnp.ndarray, base: jnp.ndarray, k: int):
+    d = _sq_l2(q, base)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+def exact_knn(base: np.ndarray, queries: np.ndarray, k: int, chunk: int = 1024):
+    """Exact kNN by brute force, chunked over queries. Returns (dists, ids)."""
+    base_j = jnp.asarray(base, jnp.float32)
+    out_d, out_i = [], []
+    for s in range(0, len(queries), chunk):
+        dd, ii = _knn_chunk(jnp.asarray(queries[s : s + chunk], jnp.float32), base_j, k)
+        out_d.append(np.asarray(dd))
+        out_i.append(np.asarray(ii))
+    return np.concatenate(out_d, 0), np.concatenate(out_i, 0)
+
+
+def knn_graph(x: np.ndarray, k: int, chunk: int = 1024) -> np.ndarray:
+    """Exact directed kNN graph (self excluded). Returns int32 (n, k)."""
+    _, ids = exact_knn(x, x, k + 1, chunk=chunk)
+    n = x.shape[0]
+    rows = []
+    for i in range(n):
+        row = ids[i]
+        row = row[row != i][:k]
+        if len(row) < k:  # degenerate duplicates; pad with first entries
+            row = np.concatenate([row, row[: k - len(row)]])
+        rows.append(row)
+    return np.asarray(rows, np.int32)
+
+
+def medoid(x: np.ndarray, sample: int = 4096, seed: int = 0) -> int:
+    """Approximate medoid: point closest to the dataset mean."""
+    mean = x.mean(axis=0, keepdims=True)
+    d = pairwise_sq_l2(mean, x)[0]
+    return int(np.argmin(d))

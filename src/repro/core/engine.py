@@ -1,0 +1,355 @@
+"""Public index API: build / save / load / search for the three compared
+systems (DiskANN, Starling-style, BAMG), all on the same I/O simulator.
+
+    idx = BAMGIndex.build(x, BAMGParams(alpha=3, beta=1.05))
+    res = idx.search(q, k=10, l=64)          # one query
+    out = idx.search_batch(queries, k=10, l=64)  # stats aggregated
+
+This is the host (exact-semantics) engine; the TPU-native batched engine is
+`repro.serve.ann_engine` (fixed-shape, shard_map scatter-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .bamg import BAMGGraph, build_bamg_from
+from .block_assign import bnf_blocks, block_members
+from .graph_build import build_nsg, build_vamana, degree_stats
+from .io_sim import BLOCK_SIZE, CostModel
+from .navgraph import NavGraph, build_navgraph, search_nav
+from .pq import PQCodec, train_pq
+from .search import SearchResult, search_bamg, search_coupled
+from .storage import (CoupledStorage, DecoupledStorage, coupled_nodes_per_block,
+                      max_capacity_for)
+
+
+def _pick_pq_m(d: int, target: int | None = None) -> int:
+    """Largest M <= target dividing d (PQ subspace count).
+
+    Default target scales with dimension (~d/16, clamped to [16, 64]) --
+    high-d corpora need more subspaces or ADC noise swamps the distance
+    ordering (faiss uses the same ballpark)."""
+    if target is None:
+        target = min(64, max(16, d // 16))
+    for m in range(min(target, d), 0, -1):
+        if d % m == 0:
+            return m
+    return 1
+
+
+@dataclasses.dataclass
+class BatchStats:
+    recall: float
+    mean_nio: float
+    mean_graph_reads: float
+    mean_vector_reads: float
+    mean_hops: float
+    mean_n_dist: float
+    mean_n_pq: float
+    qps: float
+
+
+def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
+               cost: CostModel) -> BatchStats:
+    nio = float(np.mean([r.nio for r in results]))
+    nd = float(np.mean([r.n_dist for r in results]))
+    npq = float(np.mean([r.n_pq for r in results]))
+    rec = -1.0
+    if gt is not None:
+        hits = 0
+        for r, g in zip(results, gt):
+            hits += len(set(r.ids.tolist()) & set(g[:k].tolist()))
+        rec = hits / (len(results) * k)
+    return BatchStats(
+        recall=rec, mean_nio=nio,
+        mean_graph_reads=float(np.mean([r.graph_reads for r in results])),
+        mean_vector_reads=float(np.mean([r.vector_reads for r in results])),
+        mean_hops=float(np.mean([r.hops for r in results])),
+        mean_n_dist=nd, mean_n_pq=npq, qps=cost.qps(nio, nd, npq))
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DiskANNParams:
+    r: int = 32
+    l_build: int = 64
+    alpha: float = 1.2
+    pq_m: Optional[int] = None
+    seed: int = 0
+
+
+class DiskANNIndex:
+    """Vamana graph + coupled layout in graph order + Alg. 1 search."""
+
+    kind = "diskann"
+
+    def __init__(self, x, adj, entry, codec, codes, store):
+        self.x, self.adj, self.entry = x, adj, entry
+        self.codec, self.codes, self.store = codec, codes, store
+        self.cost = CostModel()
+
+    @classmethod
+    def build(cls, x: np.ndarray, params: DiskANNParams = DiskANNParams()):
+        adj, entry = build_vamana(x, r=params.r, l_build=params.l_build,
+                                  alpha=params.alpha, seed=params.seed)
+        m = params.pq_m or _pick_pq_m(x.shape[1])
+        codec = train_pq(x, m=m, seed=params.seed)
+        codes = codec.encode(x)
+        store = CoupledStorage(x, adj)
+        return cls(x, adj, entry, codec, codes, store)
+
+    def search(self, q: np.ndarray, k: int, l: int) -> SearchResult:
+        table = self.codec.adc_table(q)
+        return search_coupled(self.store, self.codes, table, q, self.entry,
+                              k, l, block_level=False)
+
+    def search_batch(self, queries: np.ndarray, k: int, l: int,
+                     gt: Optional[np.ndarray] = None) -> BatchStats:
+        res = [self.search(q, k, l) for q in queries]
+        return _aggregate(res, gt, k, self.cost)
+
+    def degree_stats(self):
+        blocks = (self.store.pos // self.store.npb).astype(np.int64)
+        return degree_stats(self.adj, blocks)
+
+    def index_bytes(self) -> int:
+        return self.store.device.total_bytes
+
+    def memory_bytes(self) -> int:
+        return self.codes.nbytes + self.codec.codebooks.nbytes
+
+
+@dataclasses.dataclass
+class StarlingParams:
+    r: int = 32
+    l_build: int = 64
+    alpha: float = 1.2
+    pq_m: Optional[int] = None
+    nav_sample: float = 0.05     # random in-memory nav sample fraction
+    seed: int = 0
+
+
+class StarlingIndex:
+    """Vamana graph + BNF block-shuffled coupled layout + block-level search
+    + random-sample in-memory navigation graph (Starling [38])."""
+
+    kind = "starling"
+
+    def __init__(self, x, adj, entry, codec, codes, store, nav_vids, nav_adj):
+        self.x, self.adj, self.entry = x, adj, entry
+        self.codec, self.codes, self.store = codec, codes, store
+        self.nav_vids, self.nav_adj = nav_vids, nav_adj
+        self.cost = CostModel()
+
+    @classmethod
+    def build(cls, x: np.ndarray, params: StarlingParams = StarlingParams()):
+        adj, entry = build_vamana(x, r=params.r, l_build=params.l_build,
+                                  alpha=params.alpha, seed=params.seed)
+        npb = coupled_nodes_per_block(x.shape[1], params.r)
+        blocks = bnf_blocks(adj, npb, seed=params.seed)
+        order = np.argsort(blocks, kind="stable").astype(np.int64)
+        m = params.pq_m or _pick_pq_m(x.shape[1])
+        codec = train_pq(x, m=m, seed=params.seed)
+        codes = codec.encode(x)
+        store = CoupledStorage(x, adj, order=order)
+        # Starling nav graph: random sample + Vamana over the sample
+        rng = np.random.default_rng(params.seed)
+        ns = max(16, int(len(x) * params.nav_sample))
+        nav_vids = np.sort(rng.choice(len(x), size=min(ns, len(x)), replace=False))
+        if len(nav_vids) > 8:
+            nav_adj, _ = build_vamana(x[nav_vids], r=min(16, len(nav_vids) - 1),
+                                      l_build=32, alpha=1.2, seed=params.seed)
+        else:
+            nav_adj = -np.ones((len(nav_vids), 1), np.int32)
+        return cls(x, adj, entry, codec, codes, store, nav_vids, nav_adj)
+
+    def _nav_entries(self, table: np.ndarray, n_entry: int = 4) -> list[int]:
+        # greedy over the sampled nav graph using PQ distances
+        from .navgraph import NavLayer, _greedy_layer
+        layer = NavLayer(vids=self.nav_vids.astype(np.int64), adj=self.nav_adj, entry=0)
+
+        def pq_dist(vids):
+            c = self.codes[vids].astype(np.int64)
+            return table[np.arange(table.shape[0])[None, :], c].sum(1)
+
+        ids, _ = _greedy_layer(layer, [0], pq_dist, ef=16)
+        return [int(self.nav_vids[i]) for i in ids[:n_entry]] or [self.entry]
+
+    def search(self, q: np.ndarray, k: int, l: int) -> SearchResult:
+        table = self.codec.adc_table(q)
+        entries = self._nav_entries(table)
+        return search_coupled(self.store, self.codes, table, q, entries,
+                              k, l, block_level=True)
+
+    def search_batch(self, queries: np.ndarray, k: int, l: int,
+                     gt: Optional[np.ndarray] = None) -> BatchStats:
+        res = [self.search(q, k, l) for q in queries]
+        return _aggregate(res, gt, k, self.cost)
+
+    def degree_stats(self):
+        blocks = (self.store.pos // self.store.npb).astype(np.int64)
+        return degree_stats(self.adj, blocks)
+
+    def index_bytes(self) -> int:
+        return self.store.device.total_bytes
+
+    def memory_bytes(self) -> int:
+        # Starling keeps an id<->block map in memory (paper §5.2.5)
+        return (self.codes.nbytes + self.codec.codebooks.nbytes
+                + self.nav_adj.nbytes + self.nav_vids.nbytes
+                + self.store.pos.nbytes + self.store.layout.nbytes
+                + self.x.shape[1] * 4 * len(self.nav_vids))  # nav raw vectors
+
+
+# ---------------------------------------------------------------------------
+# BAMG
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BAMGParams:
+    alpha: int = 3
+    beta: float = 1.05
+    r: int = 32
+    l_build: int = 64
+    knn_k: int = 32
+    gamma: int = 256
+    capacity: Optional[int] = None   # default: max for 4 KB graph block
+    pq_m: Optional[int] = None
+    use_nav: bool = True
+    use_bmrng_prune: bool = True     # ablation: BAMG w/o BMRNG rule
+    sibling_edges: bool = True
+    seed: int = 0
+
+
+class BAMGIndex:
+    """The paper's system: BAMG graph + decoupled layout + nav graph +
+    block-first search (Alg. 2/3/4)."""
+
+    kind = "bamg"
+
+    def __init__(self, x, graph: BAMGGraph, codec, codes, store, nav, params):
+        self.x, self.graph = x, graph
+        self.codec, self.codes, self.store = codec, codes, store
+        self.nav = nav
+        self.params = params
+        self.cost = CostModel()
+
+    @classmethod
+    def build(cls, x: np.ndarray, params: BAMGParams = BAMGParams()):
+        p = params
+        nsg_adj, entry = build_nsg(x, r=p.r, l_build=p.l_build, knn_k=p.knn_k,
+                                   seed=p.seed)
+        capacity = p.capacity or max_capacity_for(p.r)
+        blocks = bnf_blocks(nsg_adj, capacity, seed=p.seed)
+        if p.use_bmrng_prune:
+            graph = build_bamg_from(x, nsg_adj, entry, blocks, capacity,
+                                    alpha=p.alpha, beta=p.beta,
+                                    sibling_edges=p.sibling_edges,
+                                    max_degree=p.r)
+        else:  # ablation: same layout, no block-aware pruning
+            graph = BAMGGraph(adj=nsg_adj, blocks=np.asarray(blocks, np.int32),
+                              members=block_members(blocks, capacity),
+                              entry=entry, capacity=capacity,
+                              alpha=p.alpha, beta=p.beta)
+        m = p.pq_m or _pick_pq_m(x.shape[1])
+        codec = train_pq(x, m=m, seed=p.seed)
+        codes = codec.encode(x)
+        store = DecoupledStorage(x, graph.adj, graph.blocks, graph.members)
+        nav = None
+        if p.use_nav:
+            nav = build_navgraph(x, graph, alpha=p.alpha, beta=p.beta,
+                                 gamma=p.gamma, capacity=capacity, seed=p.seed)
+        return cls(x, graph, codec, codes, store, nav, p)
+
+    def _pq_dist_fn(self, table: np.ndarray):
+        m_sub = table.shape[0]
+
+        def fn(vids: np.ndarray) -> np.ndarray:
+            c = self.codes[np.asarray(vids, np.int64)].astype(np.int64)
+            return table[np.arange(m_sub)[None, :], c].sum(1)
+        return fn
+
+    def entries_for(self, table: np.ndarray, n_entry: int = 4) -> list[int]:
+        if self.nav is not None and self.nav.layers:
+            seeds, _ = search_nav(self.nav, self._pq_dist_fn(table), n_entry)
+            if seeds:
+                return seeds
+        return [self.graph.entry]
+
+    def search(self, q: np.ndarray, k: int, l: int,
+               alpha: Optional[int] = None,
+               rerank_margin: Optional[float] = None,
+               random_entry_seed: Optional[int] = None) -> SearchResult:
+        table = self.codec.adc_table(q)
+        if random_entry_seed is not None:  # ablation "BAMG w/o NG"
+            rng = np.random.default_rng(random_entry_seed)
+            entries = rng.choice(len(self.x), size=4, replace=False).tolist()
+        else:
+            entries = self.entries_for(table)
+        return search_bamg(self.store, self.codes, table, q, entries, k, l,
+                           alpha=alpha if alpha is not None else self.params.alpha,
+                           rerank_margin=rerank_margin)
+
+    def search_batch(self, queries: np.ndarray, k: int, l: int,
+                     gt: Optional[np.ndarray] = None,
+                     alpha: Optional[int] = None,
+                     rerank_margin: Optional[float] = None,
+                     random_entry: bool = False) -> BatchStats:
+        res = [self.search(q, k, l, alpha=alpha, rerank_margin=rerank_margin,
+                           random_entry_seed=(i if random_entry else None))
+               for i, q in enumerate(queries)]
+        return _aggregate(res, gt, k, self.cost)
+
+    def degree_stats(self):
+        return degree_stats(self.graph.adj, self.graph.blocks)
+
+    def index_bytes(self) -> int:
+        return self.store.graph_bytes + self.store.vector_bytes
+
+    def memory_bytes(self) -> int:
+        nav = self.nav.memory_bytes() if self.nav else 0
+        return self.codes.nbytes + self.codec.codebooks.nbytes + nav
+
+    # --- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        nav_layers = self.nav.layers if self.nav else []
+        blobs = {
+            "x": self.x, "adj": self.graph.adj, "blocks": self.graph.blocks,
+            "members": self.graph.members,
+            "entry": np.asarray(self.graph.entry),
+            "capacity": np.asarray(self.graph.capacity),
+            "alpha": np.asarray(self.params.alpha),
+            "beta": np.asarray(self.params.beta),
+            "codebooks": self.codec.codebooks, "codes": self.codes,
+            "n_nav": np.asarray(len(nav_layers)),
+        }
+        for i, layer in enumerate(nav_layers):
+            blobs[f"nav{i}_vids"] = layer.vids
+            blobs[f"nav{i}_adj"] = layer.adj
+            blobs[f"nav{i}_entry"] = np.asarray(layer.entry)
+        np.savez_compressed(path, **blobs)
+
+    @classmethod
+    def load(cls, path: str) -> "BAMGIndex":
+        from .navgraph import NavLayer
+        with np.load(path) as z:
+            x = z["x"]
+            graph = BAMGGraph(adj=z["adj"], blocks=z["blocks"],
+                              members=z["members"], entry=int(z["entry"]),
+                              capacity=int(z["capacity"]),
+                              alpha=int(z["alpha"]), beta=float(z["beta"]))
+            codec = PQCodec(codebooks=z["codebooks"])
+            codes = z["codes"]
+            layers = [NavLayer(vids=z[f"nav{i}_vids"], adj=z[f"nav{i}_adj"],
+                               entry=int(z[f"nav{i}_entry"]))
+                      for i in range(int(z["n_nav"]))]
+        params = BAMGParams(alpha=graph.alpha, beta=graph.beta,
+                            capacity=graph.capacity)
+        store = DecoupledStorage(x, graph.adj, graph.blocks, graph.members)
+        nav = NavGraph(layers=layers) if layers else None
+        return cls(x, graph, codec, codes, store, nav, params)

@@ -1,0 +1,163 @@
+"""Product Quantization: codebook training (JAX k-means), encoding, ADC.
+
+The paper (following DiskANN) keeps PQ codes of all vectors in memory and
+uses asymmetric distance computation (ADC) to order the search pool; raw
+vectors are only read from disk for the final re-rank.
+
+TPU adaptation (DESIGN.md §2): ADC on TPU is a one-hot @ LUT matmul (MXU)
+instead of a gather LUT -- see kernels/pq_adc. This module holds the
+reference / host implementations and training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PQCodec:
+    """codebooks: (M, K, dsub) float32; codes are uint8 (n, M)."""
+
+    codebooks: np.ndarray
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.dsub
+
+    # -- encoding -----------------------------------------------------------
+    def encode(self, x: np.ndarray, chunk: int = 8192) -> np.ndarray:
+        cb = jnp.asarray(self.codebooks)
+        out = []
+        for s in range(0, len(x), chunk):
+            out.append(np.asarray(_encode(jnp.asarray(x[s : s + chunk], jnp.float32), cb)))
+        return np.concatenate(out, 0).astype(np.uint8)
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """Reconstruct vectors from codes (for error analysis)."""
+        m = self.m
+        parts = [self.codebooks[j][codes[:, j].astype(np.int64)] for j in range(m)]
+        return np.concatenate(parts, axis=1)
+
+    # -- ADC ----------------------------------------------------------------
+    def adc_table(self, q: np.ndarray) -> np.ndarray:
+        """Query -> (M, K) table of squared L2 distances per subspace."""
+        return np.asarray(_adc_table(jnp.asarray(q, jnp.float32), jnp.asarray(self.codebooks)))
+
+    def adc_tables(self, qs: np.ndarray) -> np.ndarray:
+        """(B,d) -> (B, M, K)."""
+        return np.asarray(
+            jax.vmap(_adc_table, in_axes=(0, None))(
+                jnp.asarray(qs, jnp.float32), jnp.asarray(self.codebooks)
+            )
+        )
+
+    def estimate(self, table: np.ndarray, codes: np.ndarray) -> np.ndarray:
+        """ADC: (M,K) table + (n,M) codes -> (n,) estimated squared distances."""
+        return _estimate_np(table, codes)
+
+    def save(self, path: str) -> None:
+        np.savez(path, codebooks=self.codebooks)
+
+    @staticmethod
+    def load(path: str) -> "PQCodec":
+        with np.load(path) as z:
+            return PQCodec(codebooks=z["codebooks"])
+
+
+def _estimate_np(table: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    # table: (M,K); codes: (n,M) -> sum_m table[m, codes[:,m]]
+    m = table.shape[0]
+    acc = np.zeros(codes.shape[0], np.float32)
+    for j in range(m):
+        acc += table[j, codes[:, j].astype(np.int64)]
+    return acc
+
+
+@jax.jit
+def _encode(x: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    # x: (b, M*dsub); codebooks: (M,K,dsub)
+    m, k, dsub = codebooks.shape
+    xs = x.reshape(x.shape[0], m, dsub)
+
+    def per_sub(xm, cbm):  # (b,dsub),(K,dsub)
+        d = (
+            jnp.sum(xm * xm, 1, keepdims=True)
+            - 2 * xm @ cbm.T
+            + jnp.sum(cbm * cbm, 1)[None, :]
+        )
+        return jnp.argmin(d, axis=1)
+
+    codes = jax.vmap(per_sub, in_axes=(1, 0), out_axes=1)(xs, codebooks)
+    return codes.astype(jnp.uint8)
+
+
+@jax.jit
+def _adc_table(q: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    m, k, dsub = codebooks.shape
+    qs = q.reshape(m, 1, dsub)
+    diff = qs - codebooks
+    return jnp.sum(diff * diff, axis=-1)  # (M, K)
+
+
+# -- training ---------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _kmeans_one(data: jnp.ndarray, init: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Lloyd iterations for one subspace. data (n,dsub), init (K,dsub)."""
+
+    def step(cent, _):
+        d = (
+            jnp.sum(data * data, 1, keepdims=True)
+            - 2 * data @ cent.T
+            + jnp.sum(cent * cent, 1)[None, :]
+        )
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, cent.shape[0], dtype=jnp.float32)
+        counts = onehot.sum(0)
+        sums = onehot.T @ data
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, init, None, length=iters)
+    return cent
+
+
+def train_pq(
+    x: np.ndarray, m: int = 16, k: int = 256, iters: int = 12, sample: int = 65536, seed: int = 0
+) -> PQCodec:
+    """Train a PQ codec on (a sample of) x. d must be divisible by m."""
+    n, d = x.shape
+    if d % m != 0:
+        raise ValueError(f"d={d} not divisible by M={m}")
+    rng = np.random.default_rng(seed)
+    if n > sample:
+        x = x[rng.choice(n, sample, replace=False)]
+    n = x.shape[0]
+    k_eff = min(k, n)
+    dsub = d // m
+    xs = jnp.asarray(x, jnp.float32).reshape(n, m, dsub)
+    inits = []
+    for j in range(m):
+        idx = rng.choice(n, k_eff, replace=False)
+        init = np.asarray(xs[:, j, :])[idx]
+        if k_eff < k:  # pad duplicate centroids (tiny datasets / tests)
+            init = np.concatenate([init, init[rng.integers(0, k_eff, k - k_eff)]], 0)
+        inits.append(init)
+    inits = jnp.asarray(np.stack(inits), jnp.float32)  # (M,K,dsub)
+    cents = jax.vmap(_kmeans_one, in_axes=(1, 0, None))(xs, inits, iters)
+    return PQCodec(codebooks=np.asarray(cents, np.float32))

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data + restart-safe sharded host pipeline."""
+from . import pipeline, synthetic  # noqa: F401

@@ -1,0 +1,2 @@
+from .ops import flash_decode  # noqa: F401
+from .ref import flash_decode_ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: KV-chunked decode attention (flash-decode).
+
+One query token per sequence attends over a long KV cache.  The KV cache is
+streamed through VMEM in chunks of TS positions; an online-softmax state
+(m = running max, l = running normalizer, acc = weighted value sum) lives in
+VMEM scratch and is carried across the sequential KV grid axis.  The same
+partial-softmax merge runs *across devices* when the cache is
+sequence-sharded (models/attention.py `decode_attention(kv_shards=...)`),
+so this kernel is the per-device building block of the distributed decode.
+
+Grid: (B, S // TS) -- batch outer, KV chunks inner (sequential).
+VMEM per step: q (1, H, Dh) + k/v (1, TS, Hkv, Dh) + acc (H, Dh) + m/l (H,).
+With H=32, Hkv=8, Dh=128, TS=512: ~16 KB + 2*2 MB + 16 KB.  GQA is handled
+by an Hkv-step loop of (G, Dh) x (Dh, TS) MXU matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                         m_ref, l_ref, acc_ref,
+                         *, ts: int, hkv: int, g: int, dh: int, scale: float):
+    j = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[0]
+    q = q_ref[...].reshape(hkv, g, dh).astype(jnp.float32) * scale
+    k = k_ref[...].reshape(ts, hkv, dh).astype(jnp.float32)
+    v = v_ref[...].reshape(ts, hkv, dh).astype(jnp.float32)
+
+    pos = j * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)  # (1, TS)
+    valid = pos < cache_len                                         # (1, TS)
+
+    def per_kv_head(n, carry):
+        m, l, acc = carry                                # (Hkv*G,), (Hkv*G,), (Hkv*G, Dh)
+        qn = jax.lax.dynamic_slice_in_dim(q, n, 1, 0).reshape(g, dh)
+        kn = jax.lax.dynamic_slice_in_dim(k, n, 1, 1).reshape(ts, dh)
+        vn = jax.lax.dynamic_slice_in_dim(v, n, 1, 1).reshape(ts, dh)
+        s = jax.lax.dot_general(qn, kn, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, TS)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(
+            jax.lax.dynamic_slice_in_dim(m, n * g, g, 0), s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])                              # (G, TS)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(jax.lax.dynamic_slice_in_dim(m, n * g, g, 0) - m_new)
+        l_new = corr * jax.lax.dynamic_slice_in_dim(l, n * g, g, 0) + p.sum(1)
+        acc_n = jax.lax.dynamic_slice_in_dim(acc, n * g, g, 0)
+        acc_n = acc_n * corr[:, None] + jax.lax.dot_general(
+            p, vn, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, n * g, 0)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, n * g, 0)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, acc_n, n * g, 0)
+        return m, l, acc
+
+    m, l, acc = jax.lax.fori_loop(
+        0, hkv, per_kv_head, (m_ref[...], l_ref[...], acc_ref[...]))
+    m_ref[...], l_ref[...], acc_ref[...] = m, l, acc
+
+    @pl.when(j == n_chunks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        out_ref[...] = (acc_ref[...] / denom).reshape(1, hkv * g, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "scale", "interpret"))
+def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        cache_len: jnp.ndarray, ts: int = 512,
+                        scale: float | None = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q (B,H,Dh) | k,v (B,S,Hkv,Dh) | cache_len (B,) -> (B,H,Dh) f32.
+
+    S % ts == 0 (ops.py pads; padded positions are masked by cache_len).
+    """
+    b, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert s % ts == 0 and h % hkv == 0
+    g = h // hkv
+    scale = float(dh ** -0.5) if scale is None else scale
+
+    out = pl.pallas_call(
+        functools.partial(_flash_decode_kernel, ts=ts, hkv=hkv, g=g, dh=dh,
+                          scale=scale),
+        grid=(b, s // ts),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, ts, hkv, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, ts, hkv, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),      # m: running max
+            pltpu.VMEM((h,), jnp.float32),      # l: running normalizer
+            pltpu.VMEM((h, dh), jnp.float32),   # acc: weighted value sum
+        ],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), q, k, v)
+    return out

@@ -1,0 +1,32 @@
+"""Public wrapper: seq padding (masked via cache_len) + backend switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode_pallas
+from .ref import flash_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "scale", "backend"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 cache_len: jnp.ndarray, ts: int = 512,
+                 scale: float | None = None, backend: str = "auto"):
+    """Decode (single new token) GQA attention over a KV cache.
+
+    q (B, H, Dh); k, v (B, S, Hkv, Dh); cache_len (B,) valid prefix lengths.
+    Returns (B, H, Dh) float32.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return flash_decode_ref(q, k, v, cache_len, scale=scale).astype(jnp.float32)
+    s = k.shape[1]
+    pad = (-s) % ts
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return flash_decode_pallas(q, k, v, cache_len, ts=ts, scale=scale,
+                               interpret=(backend == "interpret"))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: single-token (decode) GQA attention with a KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cache_len: jnp.ndarray, scale: float | None = None):
+    """q (B, H, Dh); k/v (B, S, Hkv, Dh); cache_len (B,) int32 -> (B, H, Dh).
+
+    H = G * Hkv (grouped-query attention).  Positions >= cache_len masked.
+    """
+    b, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, dh) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # scores (B, Hkv, G, S)
+    scores = jnp.einsum("bngd,bsnd->bngs", qf, kf)
+    mask = jnp.arange(s)[None, :] < cache_len[:, None]       # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jnp.exp(scores - scores.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    out = jnp.einsum("bngs,bsnd->bngd", w, vf)
+    return out.reshape(b, h, dh).astype(q.dtype)

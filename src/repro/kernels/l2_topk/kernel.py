@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused squared-L2 distance + running top-k.
+
+One MXU matmul per (query-block x base-tile) computes the distance tile;
+a k-step selection loop merges the tile into the running top-k held in the
+output block (constant out index map over the base-tile grid axis -- the
+sequential TPU grid makes the output an accumulator).
+
+VMEM per step: q (TB, D) + x (TN, D) + dist (TB, TN) + out (TB, k) --
+with TB=8, TN=512, D<=1024: ~32 KB + 2 MB + 16 KB + small.  TN and D in
+multiples of 128 keep the MXU aligned; selection is VPU work, k * (TN + k)
+ops per row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _l2_topk_kernel(q_ref, x_ref, vals_ref, ids_ref, *, k: int, tile_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)          # (TB, D)
+    x = x_ref[...].astype(jnp.float32)          # (TN, D)
+    d = (jnp.sum(q * q, 1, keepdims=True) + jnp.sum(x * x, 1)[None, :]
+         - 2.0 * jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32))
+    d = jnp.maximum(d, 0.0)                     # (TB, TN)
+    base_id = j * tile_n
+    tile_ids = base_id + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+
+    # merge buffer: [running top-k | tile]
+    buf_v = jnp.concatenate([vals_ref[...], d], axis=1)          # (TB, k+TN)
+    buf_i = jnp.concatenate([ids_ref[...], tile_ids], axis=1)
+
+    def select(s, carry):
+        bv, bi, ov, oi = carry
+        am = jnp.argmin(bv, axis=1)                              # (TB,)
+        rows = jax.lax.broadcasted_iota(jnp.int32, bv.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, bv.shape, 1)
+        hit = cols == am[:, None]
+        mv = jnp.min(bv, axis=1)
+        mi = jnp.sum(jnp.where(hit, bi, 0), axis=1)
+        bv = jnp.where(hit, jnp.inf, bv)
+        out_col = jax.lax.broadcasted_iota(jnp.int32, ov.shape, 1)
+        write = out_col == s
+        ov = jnp.where(write, mv[:, None], ov)
+        oi = jnp.where(write, mi[:, None], oi)
+        return bv, bi, ov, oi
+
+    ov = jnp.zeros_like(vals_ref)
+    oi = jnp.zeros_like(ids_ref)
+    _, _, ov, oi = jax.lax.fori_loop(0, k, select, (buf_v, buf_i, ov, oi))
+    vals_ref[...] = ov
+    ids_ref[...] = oi
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "tile_b", "tile_n", "interpret"))
+def l2_topk_pallas(queries: jnp.ndarray, base: jnp.ndarray, k: int,
+                   tile_b: int = 8, tile_n: int = 512,
+                   interpret: bool = False):
+    """queries (B, D), base (N, D) -> (vals (B,k) ascending, ids (B,k)).
+
+    B % tile_b == 0 and N % tile_n == 0 (ops.py pads).
+    """
+    b, d = queries.shape
+    n = base.shape[0]
+    assert b % tile_b == 0 and n % tile_n == 0
+
+    vals, ids = pl.pallas_call(
+        functools.partial(_l2_topk_kernel, k=k, tile_n=tile_n),
+        grid=(b // tile_b, n // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), base.astype(jnp.float32))
+    return vals, ids

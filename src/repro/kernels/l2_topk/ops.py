@@ -1,0 +1,37 @@
+"""Public wrapper: padding (base padded rows get +inf distance) + backend."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import l2_topk_pallas
+from .ref import l2_topk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_b", "tile_n", "backend"))
+def l2_topk(queries: jnp.ndarray, base: jnp.ndarray, k: int,
+            tile_b: int = 8, tile_n: int = 512, backend: str = "auto"):
+    """Exact k smallest squared-L2 distances of each query against `base`.
+
+    returns (dists (B, k) ascending, ids (B, k)); padded/absent entries get
+    dist=+inf, id=-1.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return l2_topk_ref(queries, base, k)
+    b, d = queries.shape
+    n = base.shape[0]
+    pb = (-b) % tile_b
+    pn = (-n) % tile_n
+    q = jnp.pad(queries, ((0, pb), (0, 0)))
+    # pad base with a huge-norm sentinel so padded rows never enter top-k
+    # 1e17 keeps ||x||^2 ~ 1e34*d finite in f32 while dominating any real row
+    x = jnp.pad(base, ((0, pn), (0, 0)), constant_values=1e17)
+    vals, ids = l2_topk_pallas(q, x, k, tile_b=tile_b, tile_n=tile_n,
+                               interpret=(backend == "interpret"))
+    vals = jnp.where(ids >= n, jnp.inf, vals)
+    ids = jnp.where(ids >= n, -1, ids)
+    return vals[:b], ids[:b]

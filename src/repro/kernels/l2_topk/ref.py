@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: exact squared-L2 k-nearest over a candidate set."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_topk_ref(queries: jnp.ndarray, base: jnp.ndarray, k: int):
+    """queries (B, D), base (N, D) -> (dists (B, k), ids (B, k)), ascending."""
+    q = queries.astype(jnp.float32)
+    x = base.astype(jnp.float32)
+    d = (jnp.sum(q * q, 1, keepdims=True) + jnp.sum(x * x, 1)[None, :]
+         - 2.0 * q @ x.T)
+    d = jnp.maximum(d, 0.0)
+    neg, ids = jax.lax.top_k(-d, k)
+    return -neg, ids

@@ -1,0 +1,2 @@
+from .ops import pq_adc  # noqa: F401
+from .ref import pq_adc_ref  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: PQ ADC as one-hot @ LUT matmuls on the MXU.
+
+TPU adaptation (DESIGN.md §2): GPUs/CPUs do ADC with an in-register gather
+LUT; TPUs have no fast gather, but the MXU eats (TN, K) x (K, TB) matmuls.
+We loop over the M subspaces, turning each code column into a one-hot
+(TN, K) tile and accumulating one-hot @ table_m^T into the (TN, TB) output.
+
+Grid: (N // TN, B // TB).  VMEM per step ~ TN*M*4 (codes) + TB*M*K*4
+(tables) + TN*K*4 (one-hot scratch) + TN*TB*4 (out): with TN=256, TB=8,
+M=16, K=256 that is ~16 KB + 128 KB + 256 KB + 8 KB -- well inside VMEM.
+K=256 and TN multiples of 128 keep the MXU fully aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(codes_ref, tables_ref, out_ref, *, m_sub: int, k_cent: int):
+    """codes (TN, M) int32 | tables (TB, M, K) f32 -> out (TN, TB) f32."""
+    tn = codes_ref.shape[0]
+    tb = tables_ref.shape[0]
+    codes = codes_ref[...]                      # (TN, M)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tn, k_cent), 1)
+
+    def body(m, acc):
+        c_m = jax.lax.dynamic_slice_in_dim(codes, m, 1, axis=1)   # (TN, 1)
+        onehot = (col == c_m).astype(jnp.float32)                 # (TN, K)
+        t_m = jax.lax.dynamic_slice_in_dim(tables_ref[...], m, 1, axis=1)
+        t_m = t_m.reshape(tb, k_cent)                             # (TB, K)
+        return acc + jax.lax.dot_general(
+            onehot, t_m, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                   # (TN, TB)
+
+    acc = jnp.zeros((tn, tb), jnp.float32)
+    out_ref[...] = jax.lax.fori_loop(0, m_sub, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_b", "interpret"))
+def pq_adc_pallas(tables: jnp.ndarray, codes: jnp.ndarray,
+                  tile_n: int = 256, tile_b: int = 8,
+                  interpret: bool = False) -> jnp.ndarray:
+    """tables (B, M, K) f32, codes (N, M) int -> (B, N) f32 estimates.
+
+    B and N must be multiples of the tiles (ops.py pads).
+    """
+    b, m_sub, k_cent = tables.shape
+    n = codes.shape[0]
+    assert n % tile_n == 0 and b % tile_b == 0, (n, b, tile_n, tile_b)
+    codes = codes.astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_adc_kernel, m_sub=m_sub, k_cent=k_cent),
+        grid=(n // tile_n, b // tile_b),
+        in_specs=[
+            pl.BlockSpec((tile_n, m_sub), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, m_sub, k_cent), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(codes, tables)
+    return out.T  # (B, N)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for PQ asymmetric distance computation (ADC).
+
+est[b, n] = sum_m tables[b, m, codes[n, m]]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_adc_ref(tables: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """tables (B, M, K) f32; codes (N, M) uint8/int32 -> (B, N) f32."""
+    codes = codes.astype(jnp.int32)
+    # gather form: for each (b, n, m) pick tables[b, m, codes[n, m]]
+    g = jnp.take_along_axis(
+        tables[:, None, :, :],                       # (B, 1, M, K)
+        codes[None, :, :, None].astype(jnp.int32),   # (1, N, M, 1)
+        axis=3,
+    )  # (B, N, M, 1)
+    return g[..., 0].sum(-1)

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, per-cell step builders, dry-run, drivers."""

@@ -1,0 +1,544 @@
+"""Cell builder: (arch, shape, mesh) -> step fn + abstract inputs + shardings.
+
+A *cell* is one dry-run unit: the exact jitted step a production job would
+run for that architecture and input shape, with every argument described by
+a ShapeDtypeStruct (no allocation) and every input tree annotated with a
+NamedSharding.  launch/dryrun.py lowers + compiles each cell;
+roofline/analysis.py reads the compiled artifacts.
+
+Family mapping:
+  lm     train_4k -> train_step (fwd+bwd+AdamW, ZeRO-1 moments)
+         prefill_32k -> serve_prefill;  decode_* -> decode_step
+  gnn    all shapes -> train_step on the shape's (padded) graph
+  recsys train_batch -> train_step; serve_* -> forward_scores;
+         retrieval_cand -> retrieval cascade (l2 shortlist + DIN rerank)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ShapeSpec, pad_to_multiple
+from ..configs.registry import get_arch
+from ..models.transformer import (LMConfig, ShardCtx, cache_len_for,
+                                  cache_specs, decode_step, init_cache,
+                                  init_lm_params, lm_loss, lm_param_specs,
+                                  serve_prefill)
+from ..train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                               opt_state_specs)
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable                  # positional-arg step function
+    args: tuple                   # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple           # NamedSharding pytrees matching args
+    model_flops: float            # useful-FLOPs estimate (MODEL_FLOPS)
+    comment: str = ""
+    donate: tuple = ()            # donated arg indices (state / KV caches)
+
+    def lower(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       donate_argnums=self.donate).lower(*self.args)
+
+
+def _shardings(mesh: Mesh, spec_tree, like_tree):
+    """Map a PartitionSpec tree (None = replicated) to NamedShardings."""
+    def one(spec, _leaf):
+        return NamedSharding(mesh, spec if spec is not None else P())
+    return jax.tree.map(one, spec_tree, like_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def _batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp(mesh: Mesh) -> int:
+    n = 1
+    for a in _batch_axes(mesh):
+        n *= mesh.devices.shape[mesh.axis_names.index(a)]
+    return n
+
+
+def _nmesh(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               opt_overrides: Optional[dict] = None) -> Cell:
+    mod = get_arch(arch_id)
+    shape = mod.SHAPES[shape_name]
+    if mod.FAMILY == "lm":
+        return _build_lm(mod, shape, mesh, opt_overrides or {})
+    if mod.FAMILY == "gnn":
+        return _build_gnn(mod, shape, mesh, opt_overrides or {})
+    if mod.FAMILY == "recsys":
+        return _build_recsys(mod, shape, mesh, opt_overrides or {})
+    raise ValueError(mod.FAMILY)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_state_specs(cfg: LMConfig, ctx: ShardCtx, opt_cfg, mesh):
+    # 2D FSDP("data") x TP("model") parameter layout: params, grads and
+    # AdamW moments all fully sharded (ZeRO-3-style memory)
+    p_specs = lm_param_specs(cfg, ctx, fsdp_axis="data")
+    p_shapes = jax.eval_shape(
+        lambda: init_lm_params(cfg, jax.random.PRNGKey(0)))
+    o_specs = opt_state_specs(p_specs, zero1=False)
+    return {"step": P(), "params": p_specs, "opt": o_specs}, p_shapes
+
+
+def _lm_flops(cfg: LMConfig, tokens: int, seq: int, train: bool) -> float:
+    """6*N_active*D (+ causal attention term) for train; 2*N*D for fwd."""
+    n_act = cfg.n_active_params()
+    mult = 6.0 if train else 2.0
+    core = mult * n_act * tokens
+    # attention scores+values: 2 * 2 * S_eff * H * dh per token (x3 for bwd)
+    s_eff = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    attn = (2 if not train else 6) * 2 * tokens * (s_eff / 2) \
+        * cfg.n_heads * cfg.d_head * cfg.n_layers
+    return core + attn
+
+
+def _build_lm(mod, shape: ShapeSpec, mesh: Mesh, opt_over) -> Cell:
+    cfg: LMConfig = mod.model_config()
+    ctx = ShardCtx(mesh=mesh)
+    ba = _batch_axes(mesh)
+    dp = _dp(mesh)
+    b = shape.global_batch
+    batch_spec = P(ba, None) if b % max(dp, 1) == 0 and b >= dp else P(None, None)
+    bvec_spec = P(ba) if b % max(dp, 1) == 0 and b >= dp else P(None)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(**opt_over) if opt_over else AdamWConfig()
+        state_specs, p_shapes = _lm_state_specs(cfg, ctx, opt_cfg, mesh)
+        state_sds = jax.eval_shape(lambda: {
+            "step": jnp.zeros((), I32),
+            "params": init_lm_params(cfg, jax.random.PRNGKey(0)),
+            "opt": adamw_init(init_lm_params(cfg, jax.random.PRNGKey(0)))})
+
+        accum = max(getattr(mod, "TRAIN_ACCUM", shape.accum), 1)
+
+        def train_step(state, tokens, labels):
+            params = state["params"]
+
+            def grads_of(tok, lab):
+                return jax.value_and_grad(
+                    lambda p: lm_loss(p, cfg, tok, lab, ctx),
+                    has_aux=True)(params)
+
+            if accum == 1:
+                (loss, _parts), g = grads_of(tokens, labels)
+            else:
+                # microbatch scan: halves the live activation carries and
+                # lets XLA overlap each microbatch's DP collectives with the
+                # next one's backward
+                tm = tokens.reshape(accum, b // accum, shape.seq_len)
+                lm_ = labels.reshape(accum, b // accum, shape.seq_len)
+
+                def mb(carry, inp):
+                    g_acc, l_acc = carry
+                    (l, _), g = grads_of(*inp)
+                    return (jax.tree.map(
+                        lambda a, bb: a + bb.astype(F32), g_acc, g),
+                        l_acc + l), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+                (g, lsum), _ = jax.lax.scan(mb, (g0, jnp.float32(0)),
+                                            (tm, lm_))
+                g = jax.tree.map(lambda x: x / accum, g)
+                loss = lsum / accum
+            new_p, new_o, om = adamw_update(opt_cfg, g, state["opt"], params)
+            return (dict(step=state["step"] + 1, params=new_p, opt=new_o),
+                    {"loss": loss, **om})
+
+        tok = jax.ShapeDtypeStruct((b, shape.seq_len), I32)
+        args = (state_sds, tok, tok)
+        shardings = (_shardings(mesh, state_specs, state_sds),
+                     NamedSharding(mesh, batch_spec),
+                     NamedSharding(mesh, batch_spec))
+        return Cell(mod.ARCH_ID, shape.name, "train", train_step, args,
+                    shardings,
+                    _lm_flops(cfg, b * shape.seq_len, shape.seq_len, True),
+                    donate=(0,))
+
+    p_specs = lm_param_specs(cfg, ctx)
+    p_sds = jax.eval_shape(lambda: init_lm_params(cfg, jax.random.PRNGKey(0)))
+    # serving holds parameters in bf16 (standard practice; halves HBM)
+    p_sds = jax.tree.map(
+        lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.bfloat16)
+        if jnp.issubdtype(s_.dtype, jnp.floating) else s_, p_sds)
+    p_shard = _shardings(mesh, p_specs, p_sds)
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens):
+            return serve_prefill(params, cfg, tokens, ctx)
+        tok = jax.ShapeDtypeStruct((b, shape.seq_len), I32)
+        return Cell(mod.ARCH_ID, shape.name, "prefill", prefill,
+                    (p_sds, tok), (p_shard, NamedSharding(mesh, batch_spec)),
+                    _lm_flops(cfg, b * shape.seq_len, shape.seq_len, False))
+
+    # decode
+    tp = ctx.tp
+    kv_mode = shape.kv_mode
+    if kv_mode == "auto":
+        kv_mode = "head" if cfg.n_kv_heads % tp == 0 else "seq"
+    sc = cache_len_for(cfg, shape.seq_len)
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len))
+    ck_spec, cv_spec, len_spec = cache_specs(cfg, ctx, kv_mode)
+    if b < dp:  # batch=1 cells: batch dim replicated
+        ck_spec = P(None, *list(ck_spec)[1:])
+        cv_spec = ck_spec
+    cache_shard = (NamedSharding(mesh, ck_spec), NamedSharding(mesh, cv_spec),
+                   NamedSharding(mesh, len_spec))
+
+    def decode(params, tokens, positions, caches):
+        return decode_step(params, cfg, tokens, positions, caches, ctx,
+                           kv_mode=kv_mode)
+
+    tok = jax.ShapeDtypeStruct((b, 1), I32)
+    pos = jax.ShapeDtypeStruct((b,), I32)
+    tok_shard = NamedSharding(mesh, P(ba, None) if b >= dp else P(None, None))
+    pos_shard = NamedSharding(mesh, P(ba) if b >= dp else P(None))
+    # decode model-flops: one token per sequence + KV-cache attention reads
+    n_act = cfg.n_active_params()
+    attn = 2 * 2 * b * sc * cfg.n_heads * cfg.d_head * cfg.n_layers
+    return Cell(mod.ARCH_ID, shape.name, "decode", decode,
+                (p_sds, tok, pos, cache_sds),
+                (p_shard, tok_shard, pos_shard, cache_shard),
+                2.0 * n_act * b + attn,
+                comment=f"kv_mode={kv_mode} cache_len={sc}", donate=(3,))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _gnn_sizes(shape: ShapeSpec, mesh: Mesh):
+    nd = _nmesh(mesh)
+    if shape.name == "minibatch_lg":
+        from ..models.gnn.sampler import expected_sizes
+        n, e = expected_sizes(shape.batch_nodes, list(shape.fanout))
+    elif shape.name == "molecule":
+        n = shape.n_nodes * shape.batch_graphs
+        e = shape.n_edges * shape.batch_graphs
+    else:
+        n, e = shape.n_nodes, shape.n_edges
+    n_pad = pad_to_multiple(n, 2 * nd)
+    # 16*nd: keeps every edge-chunk slice (graphcast edge_chunks<=16)
+    # aligned with the all-axes edge sharding
+    e_pad = pad_to_multiple(e, 16 * nd)
+    return n_pad, e_pad
+
+
+def _gnn_batch_sds(arch_id: str, shape: ShapeSpec, mesh: Mesh, cfg):
+    n, e = _gnn_sizes(shape, mesh)
+    ng = shape.batch_graphs if shape.name == "molecule" else 1
+    d_feat = shape.d_feat if shape.d_feat else 16
+    base = {
+        "edge_src": jax.ShapeDtypeStruct((e,), I32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), I32),
+    }
+    if arch_id == "graphcast":
+        base["node_feat"] = jax.ShapeDtypeStruct((n, d_feat), F32)
+        base["edge_feat"] = jax.ShapeDtypeStruct((e, cfg.d_edge), F32)
+        base["targets"] = jax.ShapeDtypeStruct((n, cfg.n_vars), F32)
+        base["node_mask"] = jax.ShapeDtypeStruct((n,), F32)
+    else:
+        base["species"] = jax.ShapeDtypeStruct((n,), I32)
+        base["pos"] = jax.ShapeDtypeStruct((n, 3), F32)
+        base["graph_ids"] = jax.ShapeDtypeStruct((n,), I32)
+        base["energy"] = jax.ShapeDtypeStruct((ng,), F32)
+        if arch_id == "dimenet":
+            t = pad_to_multiple(4 * e, _nmesh(mesh))
+            base["tri_in"] = jax.ShapeDtypeStruct((t,), I32)
+            base["tri_out"] = jax.ShapeDtypeStruct((t,), I32)
+    return base
+
+
+def _gnn_batch_specs(batch_sds, mesh: Mesh):
+    """Edges/triplets over every axis; node arrays over the data axes."""
+    all_axes = tuple(mesh.axis_names)
+    ba = _batch_axes(mesh)
+    specs = {}
+    nd = _nmesh(mesh)
+    for k, v in batch_sds.items():
+        if k.startswith(("edge_", "tri_")):
+            specs[k] = P(all_axes, *([None] * (len(v.shape) - 1)))
+        elif k == "energy":
+            specs[k] = P(None)
+        elif v.shape[0] % nd == 0:
+            # node arrays: all axes when divisible (padded that way)
+            specs[k] = P(all_axes, *([None] * (len(v.shape) - 1)))
+        else:
+            specs[k] = P(ba, *([None] * (len(v.shape) - 1)))
+    return specs
+
+
+def _gnn_flops(arch_id: str, cfg, n: int, e: int, t: int = 0) -> float:
+    """Per-edge/node MAC counts from the config dims (x2 MACs, x3 train)."""
+    if arch_id == "graphcast":
+        h = cfg.d_hidden
+        per_edge = 3 * h * h + h * h        # edge MLP (2 layers) approx
+        per_node = 2 * h * h + h * h
+        enc = n * (cfg.d_feat * h + h * h) + e * (cfg.d_edge * h + h * h)
+        dec = n * (h * h + h * cfg.n_vars)
+        return 6.0 * (cfg.n_layers * (e * per_edge + n * per_node) + enc + dec)
+    if arch_id in ("nequip", "mace"):
+        # per path (l1,l2,l3): radial MLP MACs + CG contraction ~27 mults/C
+        c = cfg.channels
+        paths = 15  # l<=2 CG paths
+        per_edge = 2 * paths * (cfg.n_rbf * cfg.radial_hidden
+                                + cfg.radial_hidden * c + 27 * c)
+        n_mix = 3 if arch_id == "nequip" else (1 + 2 * paths)
+        per_node = 2 * n_mix * 9 * c * c
+        return 6.0 * cfg.n_layers * (e * per_edge + n * per_node)
+    if arch_id == "dimenet":
+        h = cfg.d_hidden
+        per_tri = h * cfg.n_bilinear * (1 + h)
+        per_edge = 2 * h * h
+        return 6.0 * cfg.n_blocks * (t * per_tri + e * per_edge)
+    raise ValueError(arch_id)
+
+
+def _build_gnn(mod, shape: ShapeSpec, mesh: Mesh, opt_over) -> Cell:
+    arch_id = mod.ARCH_ID
+    if arch_id == "graphcast":
+        d_feat = shape.d_feat if shape.d_feat else 16
+        _, e_est = _gnn_sizes(shape, mesh)
+        cfg = mod.model_config(d_feat=d_feat,
+                               edge_chunks=16 if e_est > 4_000_000 else 1)
+        from ..models.gnn import graphcast as m
+        all_axes = tuple(mesh.axis_names)
+
+        def gc_constrain(arr, kind):
+            if kind == "edge_chunked":
+                spec = P(None, all_axes, *([None] * (arr.ndim - 2)))
+            elif kind == "nodes_replicated":
+                spec = P(*([None] * arr.ndim))
+            elif kind in ("edges", "edge_chunk", "nodes"):
+                if arr.shape[0] % _nmesh(mesh) != 0:
+                    return arr
+                spec = P(all_axes, *([None] * (arr.ndim - 1)))
+            else:
+                return arr
+            return jax.lax.with_sharding_constraint(
+                arr, NamedSharding(mesh, spec))
+
+        def loss_fn(params, batch):
+            pred = m.forward(params, cfg, batch, constrain_fn=gc_constrain)
+            err = (pred.astype(F32) - batch["targets"]) ** 2
+            w = batch["node_mask"][:, None]
+            return jnp.sum(err * w) / jnp.maximum(jnp.sum(w) * cfg.n_vars, 1.0), {}
+        init_fn = functools.partial(m.init_params, cfg)
+    else:
+        cfg = mod.model_config()
+        if arch_id == "nequip":
+            from ..models.gnn import nequip as m
+        elif arch_id == "mace":
+            from ..models.gnn import mace as m
+        else:
+            from ..models.gnn import dimenet as m
+        all_axes0 = tuple(mesh.axis_names)
+        nd0 = _nmesh(mesh)
+
+        def gnn_scatter(vals, ix, rows):
+            if (rows % nd0 != 0 or ix.shape[0] % nd0 != 0
+                    or rows * vals.shape[1] < 100_000_000):
+                dump = jnp.where(ix >= 0, ix, rows)
+                return jax.ops.segment_sum(
+                    vals, dump, num_segments=rows + 1)[:rows]
+            from jax.experimental.shard_map import shard_map
+            from ..models.gnn.ring_gather import ring_scatter_add
+            return shard_map(
+                lambda v, i: ring_scatter_add(v, i, all_axes0, rows // nd0),
+                mesh=mesh, in_specs=(P(all_axes0, None), P(all_axes0)),
+                out_specs=P(all_axes0, None), check_rep=False)(vals, ix)
+
+        def gnn_gather(table, ix):
+            # distributed row gather (ring) for big node/edge tables
+            if (table.shape[0] % nd0 != 0 or ix.shape[0] % nd0 != 0
+                    or table.shape[0] < 1_000_000):
+                return table[jnp.clip(ix, 0, table.shape[0] - 1)]
+            from jax.experimental.shard_map import shard_map
+            from ..models.gnn.ring_gather import ring_gather
+            return shard_map(
+                lambda t, i: ring_gather(t, i, all_axes0), mesh=mesh,
+                in_specs=(P(all_axes0, None), P(all_axes0)),
+                out_specs=P(all_axes0, None), check_rep=False)(table, ix)
+
+        if arch_id == "dimenet":
+            all_axes = tuple(mesh.axis_names)
+            nd_ = _nmesh(mesh)
+
+            def dn_constrain(arr, kind):
+                if kind == "edges_replicated":
+                    spec = P(*([None] * arr.ndim))
+                elif kind in ("edges", "triplets"):
+                    if arr.shape[0] % nd_ != 0:
+                        return arr
+                    spec = P(all_axes, *([None] * (arr.ndim - 1)))
+                else:
+                    return arr
+                return jax.lax.with_sharding_constraint(
+                    arr, NamedSharding(mesh, spec))
+
+            from jax.experimental.shard_map import shard_map
+            from ..models.gnn.ring_gather import ring_gather, ring_scatter_add
+
+            def dn_scatter(vals, ix, rows):
+                if (rows % nd_ != 0 or ix.shape[0] % nd_ != 0
+                        or rows < 1_000_000):
+                    dump = jnp.where(ix >= 0, ix, rows)
+                    return jax.ops.segment_sum(
+                        vals, dump, num_segments=rows + 1)[:rows]
+                rows_local = rows // nd_
+                return shard_map(
+                    lambda v, i: ring_scatter_add(v, i, all_axes, rows_local),
+                    mesh=mesh,
+                    in_specs=(P(all_axes, None), P(all_axes)),
+                    out_specs=P(all_axes, None), check_rep=False)(vals, ix)
+
+            def dn_gather(table, ix):
+                # distributed row gather: memory-bounded ring over the mesh
+                if (table.shape[0] % nd_ != 0 or ix.shape[0] % nd_ != 0
+                        or table.shape[0] < 1_000_000):
+                    return table[jnp.clip(ix, 0, table.shape[0] - 1)]
+                return shard_map(
+                    lambda t, i: ring_gather(t, i, all_axes), mesh=mesh,
+                    in_specs=(P(all_axes, None), P(all_axes)),
+                    out_specs=P(all_axes, None), check_rep=False)(table, ix)
+
+            def loss_fn(params, batch):
+                return m.loss_fn(params, cfg, batch,
+                                 constrain_fn=dn_constrain,
+                                 gather_fn=dn_gather,
+                                 scatter_fn=dn_scatter), {}
+        else:
+            def loss_fn(params, batch):
+                return m.loss_fn(params, cfg, batch, gather_fn=gnn_gather,
+                                 scatter_fn=gnn_scatter), {}
+        init_fn = functools.partial(m.init_params, cfg)
+
+    opt_cfg = AdamWConfig(**opt_over) if opt_over else AdamWConfig()
+    batch_sds = _gnn_batch_sds(arch_id, shape, mesh, cfg)
+    batch_specs = _gnn_batch_specs(batch_sds, mesh)
+    state_sds = jax.eval_shape(lambda: {
+        "step": jnp.zeros((), I32),
+        "params": init_fn(jax.random.PRNGKey(0)),
+        "opt": adamw_init(init_fn(jax.random.PRNGKey(0)))})
+    state_specs = jax.tree.map(lambda _: P(), state_sds)
+
+    def train_step(state, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: loss_fn(p, batch), has_aux=True)(state["params"])
+        new_p, new_o, om = adamw_update(opt_cfg, g, state["opt"],
+                                        state["params"])
+        return (dict(step=state["step"] + 1, params=new_p, opt=new_o),
+                {"loss": loss, **om})
+
+    n, e = _gnn_sizes(shape, mesh)
+    t = batch_sds.get("tri_in")
+    flops = _gnn_flops(arch_id, cfg, n, e, t.shape[0] if t is not None else 0)
+    return Cell(arch_id, shape.name, "train", train_step,
+                (state_sds, batch_sds),
+                (_shardings(mesh, state_specs, state_sds),
+                 _shardings(mesh, batch_specs, batch_sds)),
+                flops, comment=f"n={n} e={e}", donate=(0,))
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+def _din_batch_sds(cfg, b: int):
+    s = cfg.seq_len
+    return {"hist_items": jax.ShapeDtypeStruct((b, s), I32),
+            "hist_cates": jax.ShapeDtypeStruct((b, s), I32),
+            "hist_len": jax.ShapeDtypeStruct((b,), I32),
+            "target_item": jax.ShapeDtypeStruct((b,), I32),
+            "target_cate": jax.ShapeDtypeStruct((b,), I32),
+            "label": jax.ShapeDtypeStruct((b,), F32)}
+
+
+def _din_flops(cfg, b: int, train: bool) -> float:
+    d = cfg.d_feat
+    attn = cfg.seq_len * (4 * d * cfg.attn_mlp[0]
+                          + cfg.attn_mlp[0] * cfg.attn_mlp[1] + cfg.attn_mlp[1])
+    mlp = 3 * d * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1] + cfg.mlp[1]
+    return (6.0 if train else 2.0) * b * (attn + mlp)
+
+
+def _build_recsys(mod, shape: ShapeSpec, mesh: Mesh, opt_over) -> Cell:
+    from ..models.recsys import din as m
+    cfg = mod.model_config()
+    ba = _batch_axes(mesh)
+    dp = _dp(mesh)
+    b = shape.batch
+    mdl = "model"
+    p_specs = m.param_specs(cfg, mesh, mdl)
+    p_sds = jax.eval_shape(lambda: m.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = _shardings(mesh, p_specs, p_sds)
+    batch_sds = _din_batch_sds(cfg, b)
+    row = ba if (b % max(dp, 1) == 0 and b >= dp) else None
+    batch_specs = {k: P(row, *([None] * (len(v.shape) - 1)))
+                   for k, v in batch_sds.items()}
+    batch_shard = _shardings(mesh, batch_specs, batch_sds)
+    bx = ba if (b % max(dp, 1) == 0 and b >= dp) else ()
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(**opt_over) if opt_over else AdamWConfig()
+        o_specs = opt_state_specs(p_specs, zero1=True, params_shapes=p_sds,
+                                  mesh=mesh)
+        state_specs = {"step": P(), "params": p_specs, "opt": o_specs}
+        state_sds = jax.eval_shape(lambda: {
+            "step": jnp.zeros((), I32),
+            "params": m.init_params(cfg, jax.random.PRNGKey(0)),
+            "opt": adamw_init(m.init_params(cfg, jax.random.PRNGKey(0)))})
+
+        def train_step(state, batch):
+            (loss), g = jax.value_and_grad(
+                lambda p: m.loss_fn(p, cfg, batch, mesh, mdl, bx))(
+                    state["params"])
+            new_p, new_o, om = adamw_update(opt_cfg, g, state["opt"],
+                                            state["params"])
+            return (dict(step=state["step"] + 1, params=new_p, opt=new_o),
+                    {"loss": loss, **om})
+
+        return Cell(mod.ARCH_ID, shape.name, "train", train_step,
+                    (state_sds, batch_sds),
+                    (_shardings(mesh, state_specs, state_sds), batch_shard),
+                    _din_flops(cfg, b, True), donate=(0,))
+
+    if shape.kind == "serve":
+        def serve(params, batch):
+            return m.forward_scores(params, cfg, batch, mesh, mdl, bx)
+        return Cell(mod.ARCH_ID, shape.name, "serve", serve,
+                    (p_sds, batch_sds), (p_shard, batch_shard),
+                    _din_flops(cfg, b, False))
+
+    # retrieval_cand: the candidate set is the item table itself; using all
+    # n_items (= 2^20 >= the 10^6 cell spec) keeps the slice shard-aligned
+    n_cand = cfg.n_items
+
+    def retrieval(params, batch):
+        return m.retrieval_step(params, cfg, batch, n_cand, k=100,
+                                mesh=mesh, model_axis=mdl, batch_axes=bx,
+                                backend="ref")
+    shortlist = 2.0 * b * n_cand * cfg.embed_dim
+    rerank = _din_flops(cfg, b * cfg.rerank_k, False)
+    return Cell(mod.ARCH_ID, shape.name, "retrieval", retrieval,
+                (p_sds, batch_sds), (p_shard, batch_shard),
+                shortlist + rerank, comment=f"n_cand={n_cand}")

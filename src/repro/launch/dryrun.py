@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run driver (DESIGN.md, deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+  jax.jit(step, in_shardings=...).lower(**abstract inputs).compile()
+then record memory_analysis / cost_analysis / loop-corrected HLO terms
+(roofline) into a resumable JSON.
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count at first init.  512 fake CPU devices back both the single-pod
+(16 x 16 = 256 chips) and the multi-pod (2 x 16 x 16 = 512) meshes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --out out.json --force
+"""
+import argparse
+import json
+import time
+import traceback
+
+HBM_PER_CHIP = 16 * 2 ** 30  # v5e
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    from .mesh import make_production_mesh
+    from .cells import build_cell
+    from ..roofline.analysis import roofline_from_text
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(mesh.devices.size)
+    rec: dict = {"arch": arch_id, "shape": shape_name,
+                 "mesh": "multi" if multi_pod else "single",
+                 "n_devices": n_dev}
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, mesh)
+    rec["kind"] = cell.kind
+    rec["comment"] = cell.comment
+    rec["model_flops"] = cell.model_flops
+    lowered = cell.lower()
+    rec["t_lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["t_compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    rec["mem"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    tot = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+           + ma.output_size_in_bytes)
+    rec["mem"]["total_bytes"] = int(tot)
+    rec["mem"]["fits_hbm"] = bool(tot <= HBM_PER_CHIP)
+    ca = compiled.cost_analysis()
+    rec["cost_analysis"] = {k: float(ca[k]) for k in
+                            ("flops", "bytes accessed") if k in ca}
+    t0 = time.time()
+    rl = roofline_from_text(compiled.as_text(), cell.model_flops, n_dev)
+    rec["roofline"] = rl.summary()
+    rec["t_analyze_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs.registry import ARCHS, all_cells
+
+    cells = [(a, s) for (a, s) in all_cells()
+             if (args.arch == "all" or a == args.arch)
+             and (args.shape == "all" or s == args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results: dict = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_fail = 0
+    for arch_id, shape_name in cells:
+        for multi in meshes:
+            key = f"{arch_id}|{shape_name}|{'multi' if multi else 'single'}"
+            if key in results and results[key].get("status") == "ok" \
+                    and not args.force:
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(arch_id, shape_name, multi)
+                rec["status"] = "ok"
+                mem_g = rec["mem"]["total_bytes"] / 2 ** 30
+                fits = "fits" if rec["mem"]["fits_hbm"] else "OVER"
+                rl = rec["roofline"]
+                print(f"OK   {key:58s} {time.time()-t0:6.1f}s "
+                      f"mem={mem_g:6.2f}GiB({fits}) "
+                      f"bneck={rl['bottleneck']:10s} "
+                      f"t={rl['t_bound_s']*1e3:8.2f}ms "
+                      f"useful={rl['useful_ratio']:.2f}", flush=True)
+            except Exception as e:  # noqa: BLE001 -- report, continue sweep
+                rec = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                n_fail += 1
+                print(f"FAIL {key:58s} {time.time()-t0:6.1f}s {rec['error'][:140]}",
+                      flush=True)
+            results[key] = rec
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    print(f"\n{ok} ok / {len(results)} recorded -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

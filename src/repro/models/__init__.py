@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys -- pure JAX."""
+from . import attention, layers, moe, transformer  # noqa: F401

@@ -1,0 +1,173 @@
+"""Attention: chunked causal GQA prefill/train + KV-cache decode.
+
+Three compute paths, one semantics (tests cross-check them):
+  * `causal_attention`      -- chunked (flash-style) online-softmax scan over
+                               KV blocks, pure jnp: the dry-run / CPU path
+                               and the under-jit TPU fallback.
+  * `kernels.flash_decode`  -- Pallas TPU decode kernel (interpret-validated).
+  * `decode_attention`      -- dispatches decode to the kernel (or ref) and,
+                               when the KV cache is *sequence-sharded*,
+                               merges per-shard partial softmax states with a
+                               log-sum-exp psum (the distributed flash-decode
+                               of DESIGN.md §2, for long_500k / kv_heads not
+                               divisible by TP).
+
+Supports GQA/MQA (h = g * h_kv) and sliding-window attention (danube).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_decode import flash_decode
+from ..kernels.flash_decode.ref import flash_decode_ref
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jnp.ndarray, g: int) -> jnp.ndarray:
+    """(B, S, Hkv, Dh) -> (B, S, Hkv*g, Dh) by head repetition."""
+    if g == 1:
+        return k
+    b, s, hkv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, g, dh)).reshape(
+        b, s, hkv * g, dh)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     q_offset: jnp.ndarray | int = 0,
+                     window: Optional[int] = None,
+                     chunk_q: int = 512, chunk_kv: int = 1024,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Causal (optionally sliding-window) GQA attention, memory-bounded.
+
+    q (B, Sq, H, Dh); k, v (B, Skv, Hkv, Dh).  Query position i attends to
+    kv position j iff j <= i + q_offset and (window is None or
+    i + q_offset - j < window).  Online softmax over KV chunks keeps the
+    live score tile at (B, chunk_q, H, chunk_kv).
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, skv)
+    nq = -(-sq // cq)
+    nk = -(-skv // ck)
+    pad_q = nq * cq - sq
+    pad_k = nk * ck - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    kf = repeat_kv(k, g)
+    vf = repeat_kv(v, g)
+    qf = (q.astype(jnp.float32) * scale)
+    # (nq, B, cq, H, Dh)
+    qs = qf.reshape(b, nq, cq, h, dh).transpose(1, 0, 2, 3, 4)
+    ks = kf.astype(jnp.float32).reshape(b, nk, ck, h, dh).transpose(1, 0, 2, 3, 4)
+    vs = vf.astype(jnp.float32).reshape(b, nk, ck, h, dh).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def q_chunk_body(carry, qi_inp):
+        qi_idx, qc = qi_inp                               # (), (B, cq, H, Dh)
+        q_pos = q_pos_base + qi_idx * cq + jnp.arange(cq, dtype=jnp.int32)
+
+        def kv_body(state, kv_inp):
+            m, l, acc = state
+            kj_idx, kc, vc = kv_inp
+            k_pos = kj_idx * ck + jnp.arange(ck, dtype=jnp.int32)
+            s = jnp.einsum("bqhd,bkhd->bqhk", qc, kc)     # (B, cq, H, ck)
+            ok = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                ok &= (q_pos[:, None] - k_pos[None, :]) < window
+            ok &= (k_pos < skv)[None, :]                  # kv padding
+            s = jnp.where(ok[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(ok[None, :, None, :], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, cq, h), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, cq, h), jnp.float32)
+        a0 = jnp.zeros((b, cq, h, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nk, dtype=jnp.int32), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out
+
+    # checkpoint per q-chunk: the backward otherwise saves every inner
+    # kv-scan carry for every q chunk (measured GiBs on 32k prefill)
+    _, outs = jax.lax.scan(jax.checkpoint(q_chunk_body), None,
+                           (jnp.arange(nq, dtype=jnp.int32), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * cq, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+def decode_attention_local(q: jnp.ndarray, cache_k: jnp.ndarray,
+                           cache_v: jnp.ndarray, cache_len: jnp.ndarray,
+                           backend: str = "auto") -> jnp.ndarray:
+    """Per-device decode attention. q (B, H, Dh); caches (B, S, Hkv, Dh)."""
+    return flash_decode(q, cache_k, cache_v, cache_len, backend=backend)
+
+
+def _decode_partial(q, cache_k, cache_v, cache_len, scale):
+    """Unnormalized local attention + softmax stats for cross-shard merge.
+
+    Returns (acc (B,H,Dh) = sum_j exp(s_j - m) v_j, m (B,H), l (B,H)).
+    """
+    b, h, dh = q.shape
+    s, hkv = cache_k.shape[1], cache_k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, dh) * scale
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    scores = jnp.einsum("bngd,bsnd->bngs", qf, kf)
+    ok = jnp.arange(s)[None, :] < cache_len[:, None]
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    m = scores.max(-1)                                     # (B, Hkv, G)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bngs,bsnd->bngd", p, vf)
+    return (acc.reshape(b, h, dh), m.reshape(b, h), l.reshape(b, h))
+
+
+def decode_attention_seqsharded(q, cache_k, cache_v, cache_len, axis_names,
+                                scale: Optional[float] = None):
+    """Decode attention with the KV cache sequence-sharded over `axis_names`
+    (call inside shard_map).  Each shard computes a partial softmax over its
+    KV slice; partials merge with a log-sum-exp psum -- one small collective
+    of (B, H, Dh + 2) per layer, the TPU analogue of the paper's "one I/O
+    per monotone step".
+
+    cache_len here is the *local* valid length of this shard's slice.
+    """
+    dh = q.shape[-1]
+    scale = dh ** -0.5 if scale is None else scale
+    acc, m, l = _decode_partial(q, cache_k, cache_v, cache_len, scale)
+    m_glob = jax.lax.pmax(m, axis_names)                   # (B, H)
+    w = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * w, axis_names)
+    acc_glob = jax.lax.psum(acc * w[..., None], axis_names)
+    return (acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]).astype(q.dtype)
+
+
+def shard_lengths(total_len: jnp.ndarray, shard_idx: jnp.ndarray,
+                  shard_size: int) -> jnp.ndarray:
+    """Local valid length of shard `shard_idx` for a prefix of `total_len`."""
+    start = shard_idx * shard_size
+    return jnp.clip(total_len - start, 0, shard_size)

@@ -1,0 +1,6 @@
+"""GNN zoo: graphcast (EPD mesh GNN), nequip / mace (E(3)-equivariant),
+dimenet (directional triplet MP) -- all on segment-op message passing.
+
+Submodules are imported lazily (import repro.models.gnn.<name>) to keep
+partial builds importable.
+"""

@@ -1,0 +1,136 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN [arXiv:2212.12794].
+
+The assigned config (16 processor layers, d_hidden=512, sum aggregation,
+n_vars=227) runs on whatever graph the shape cell provides (the benchmark
+shapes are generic graphs; the icosahedral mesh refinement belongs to the
+weather pipeline, which is out of scope -- the *architecture* is the
+encoder + 16 interaction-network processor blocks + decoder).
+
+Each processor block is a standard interaction network:
+  e' = e + MLP([e, x_src, x_dst])          (edge update)
+  x' = x + MLP([x, sum_{e into v} e'])     (node update, sum aggregation)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (edge_mask, gather_src_dst, init_mlp, mlp_apply,
+                     scatter_to_nodes)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    n_vars: int = 227           # output variables per node
+    d_feat: int = 227           # input features per node (grid vars)
+    d_edge: int = 8
+    aggregator: str = "sum"
+    mlp_layers: int = 2
+    dtype: str = "float32"      # activation dtype ("bfloat16" for big cells)
+    edge_chunks: int = 1        # scan edges in chunks (memory lever for
+                                # 10^7..10^8-edge full-batch cells)
+
+
+def init_params(cfg: GraphCastConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 4 + 2 * cfg.n_layers)
+    h = cfg.d_hidden
+    params = {
+        "enc_node": init_mlp(ks[0], [cfg.d_feat, h, h]),
+        "enc_edge": init_mlp(ks[1], [cfg.d_edge, h, h]),
+        "dec_node": init_mlp(ks[2], [h, h, cfg.n_vars]),
+        "layers": {
+            "edge_mlp": _stack([init_mlp(ks[4 + 2 * i], [3 * h, h, h])
+                                for i in range(cfg.n_layers)]),
+            "node_mlp": _stack([init_mlp(ks[5 + 2 * i], [2 * h, h, h])
+                                for i in range(cfg.n_layers)]),
+        },
+    }
+    return params
+
+
+def _stack(mlps: list) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *mlps)
+
+
+def forward(params, cfg: GraphCastConfig, batch,
+            constrain_fn=None) -> jnp.ndarray:
+    """batch: node_feat (N, d_feat), edge_src/dst (E,), edge_feat (E, d_edge).
+    Returns per-node predictions (N, n_vars).
+
+    constrain_fn(arr, kind) applies sharding constraints ("edge_chunked"
+    keeps the reshaped (nc, ec, h) tensors edge-sharded on dim 1 -- without
+    it GSPMD can pick a catastrophic resharding for the chunk scan)."""
+    cst = constrain_fn or (lambda a, kind: a)
+    n = batch["node_feat"].shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    mask = edge_mask(batch["edge_src"])
+    x = cst(mlp_apply(params["enc_node"], batch["node_feat"].astype(dt)),
+            "nodes")
+    e = cst(mlp_apply(params["enc_edge"], batch["edge_feat"].astype(dt)),
+            "edges")
+
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    nc = cfg.edge_chunks
+    e_total = src.shape[0]
+    assert e_total % nc == 0, (e_total, nc)
+    ec = e_total // nc
+
+    def body(carry, lp):
+        x, e = carry
+        # pin the (sharded) carry as the saved residual: without the
+        # barrier GSPMD substitutes the *replicated* x_rep into the scan's
+        # per-layer save stack (measured: 16 x 2.4M x 512 replicated saves,
+        # 112 GiB, on ogb_products)
+        x, e = jax.lax.optimization_barrier((x, e))
+        if nc == 1:
+            xs, xd = gather_src_dst(x, src, dst)
+            e = e + mlp_apply(lp["edge_mlp"], jnp.concatenate([e, xs, xd], -1))
+            agg = cst(scatter_to_nodes(e, dst, n, mask, agg=cfg.aggregator),
+                      "nodes")
+        else:
+            # edge-chunked update with all node<->edge traffic hoisted out
+            # of the chunk loop: x is gathered into *edge-sharded* xs/xd
+            # tensors once per layer (replicated operand -> local gather),
+            # so forward has ONE all-gather of x and backward emits ONE
+            # scatter+psum for dx per layer.  Leaving the gathers inside
+            # the (checkpointed) chunk scan instead psums the x cotangent
+            # per chunk: measured 9.2 TB -> 2.0 TB -> 0.16 TB collective
+            # bytes/device on ogb_products across these two steps.
+            x_rep = cst(x, "nodes_replicated")
+            xs_all, xd_all = gather_src_dst(x_rep, src, dst)
+            xs_all = cst(xs_all, "edges")
+            xd_all = cst(xd_all, "edges")
+
+            def chunk(_, inp):
+                e_c, xs, xd = inp
+                e_new = e_c + mlp_apply(lp["edge_mlp"],
+                                        jnp.concatenate([e_c, xs, xd], -1))
+                return None, cst(e_new, "edge_chunk")
+
+            h = e.shape[-1]
+            _, e = jax.lax.scan(
+                jax.checkpoint(chunk), None,
+                (cst(e.reshape(nc, ec, h), "edge_chunked"),
+                 cst(xs_all.reshape(nc, ec, h), "edge_chunked"),
+                 cst(xd_all.reshape(nc, ec, h), "edge_chunked")))
+            e = cst(e.reshape(e_total, h), "edges")
+            agg = cst(scatter_to_nodes(e, dst, n, mask, agg=cfg.aggregator),
+                      "nodes")
+        x = cst(x + mlp_apply(lp["node_mlp"],
+                              jnp.concatenate([x, agg], -1)), "nodes")
+        return (x, e), None
+
+    (x, e), _ = jax.lax.scan(jax.checkpoint(body), (x, e), params["layers"])
+    return mlp_apply(params["dec_node"], x)
+
+
+def loss_fn(params, cfg: GraphCastConfig, batch) -> jnp.ndarray:
+    """MSE regression against per-node targets (B-step forecast proxy)."""
+    pred = forward(params, cfg, batch)
+    tgt = batch["targets"]
+    return jnp.mean((pred.astype(jnp.float32) - tgt.astype(jnp.float32)) ** 2)

@@ -1,0 +1,151 @@
+"""NequIP: E(3)-equivariant interatomic potential [arXiv:2101.03164].
+
+Assigned config: 5 layers, 32 channels, l_max=2, n_rbf=8, cutoff=5 A.
+
+Features are dicts of irreps {l: (N, 2l+1, C)}.  One interaction layer:
+  for each CG path (l1 in features) x (l2 of edge harmonic) -> l3:
+      msg^(l3) += R_path(rbf(|r|)) * CG[l3,l1,l2] . (V_src^(l1) (x) Y^(l2)(r))
+  aggregate msg to nodes (segment sum), then per-l linear self-interaction
+  + gated nonlinearity (scalars: silu; l>0: sigmoid(scalar gate) * tensor).
+
+The CG tensors come from so3.real_cg (numerically derived, equivariance
+property-tested).  Readout: scalar channel MLP -> per-atom energy; total
+energy = sum; loss = MSE on energies (forces omitted -- config-compatible
+autodiff forces are exposed via `forces_fn`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bessel_rbf, edge_mask, edge_vectors, init_mlp, mlp_apply
+from .so3 import DIMS, real_cg, sph_harm_jax
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 8
+    radial_hidden: int = 64
+
+
+def _paths(l_max: int):
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if real_cg(l1, l2, l3) is not None:
+                    out.append((l1, l2, l3))
+    return out
+
+
+def init_params(cfg: NequIPConfig, key: jax.Array) -> dict:
+    paths = _paths(cfg.l_max)
+    n_layer_keys = 2 + len(paths)
+    ks = jax.random.split(key, 3 + cfg.n_layers * n_layer_keys)
+    c = cfg.channels
+    params = {"embed": jax.random.normal(ks[0], (cfg.n_species, c)) * 0.5,
+              "readout": init_mlp(ks[1], [c, c, 1]), "layers": []}
+    ki = 3
+    for _ in range(cfg.n_layers):
+        lp = {"radial": {}, "self": {}}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            lp["radial"][f"{l1}{l2}{l3}"] = init_mlp(
+                ks[ki + pi], [cfg.n_rbf, cfg.radial_hidden, c])
+        for l in range(cfg.l_max + 1):
+            lp["self"][str(l)] = (jax.random.normal(
+                ks[ki + len(paths)], (c, c)) / np.sqrt(c))
+        lp["gate"] = init_mlp(ks[ki + len(paths) + 1], [c, cfg.l_max + 1])
+        params["layers"].append(lp)
+        ki += n_layer_keys
+    return params
+
+
+def forward_energy(params, cfg: NequIPConfig, batch,
+                   gather_fn=None, scatter_fn=None) -> jnp.ndarray:
+    """batch: species (N,) int32, pos (N, 3), edge_src/dst (E,).
+    Returns per-graph energy: graph_ids (N,) -> (n_graphs,).
+
+    gather_fn(table_2d, idx): distributed row gather for the per-edge
+    source-feature lookup (ring_gather at ogb scale -- replicating the
+    (N, 25C) feature gathers costs 131 GiB/device otherwise)."""
+    take = gather_fn or (lambda t, i: t[jnp.clip(i, 0, t.shape[0] - 1)])
+
+    def _default_scat(vals, ix, rows):
+        dump2 = jnp.where(ix >= 0, ix, rows)
+        return jax.ops.segment_sum(vals, dump2, num_segments=rows + 1)[:rows]
+    scat = scatter_fn or _default_scat
+    species = batch["species"]
+    pos = batch["pos"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = species.shape[0]
+    mask = edge_mask(src)
+    unit, r = edge_vectors(pos, src, dst)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * mask[:, None]
+    ylm = {l: sph_harm_jax(l, unit) for l in range(cfg.l_max + 1)}
+
+    feats = {0: params["embed"][jnp.clip(species, 0, cfg.n_species - 1)][:, None, :]}
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n, DIMS[l], cfg.channels))
+
+    paths = _paths(cfg.l_max)
+    s_clip = jnp.clip(src, 0, n - 1)
+    dump = jnp.where(mask, dst, n)
+
+    for lp in params["layers"]:
+        msgs = {l: jnp.zeros((n, DIMS[l], cfg.channels))
+                for l in range(cfg.l_max + 1)}
+        for (l1, l2, l3) in paths:
+            cg = jnp.asarray(real_cg(l1, l2, l3), jnp.float32)
+            w = mlp_apply(lp["radial"][f"{l1}{l2}{l3}"], rbf)   # (E, C)
+            f2d = feats[l1].reshape(n, -1)
+            v = take(f2d, s_clip).reshape(
+                s_clip.shape[0], *feats[l1].shape[1:])          # (E, 2l1+1, C)
+            m = jnp.einsum("kij,eic,ej,ec->ekc", cg, v, ylm[l2], w)
+            m = jnp.where(mask[:, None, None], m, 0.0)
+            km = m.shape[1]
+            agg = scat(m.reshape(m.shape[0], -1),
+                       jnp.where(mask, dst, -1), n)
+            msgs[l3] = msgs[l3] + agg.reshape(n, km, cfg.channels)
+        # self-interaction + gate
+        gates = jax.nn.sigmoid(mlp_apply(lp["gate"], feats[0][:, 0, :]))
+        new = {}
+        for l in range(cfg.l_max + 1):
+            h = feats[l] + msgs[l]
+            h = jnp.einsum("nic,cd->nid", h, lp["self"][str(l)])
+            if l == 0:
+                new[l] = jax.nn.silu(h)
+            else:
+                new[l] = h * gates[:, None, l:l + 1]
+        feats = new
+
+    e_atom = mlp_apply(params["readout"], feats[0][:, 0, :])[:, 0]  # (N,)
+    gid = batch.get("graph_ids")
+    if gid is None:
+        return jnp.sum(e_atom, keepdims=True)
+    # n_graphs must be static under jit: taken from the energy target shape
+    ngraph = batch["energy"].shape[0]
+    return jax.ops.segment_sum(e_atom, gid, num_segments=ngraph)
+
+
+def loss_fn(params, cfg: NequIPConfig, batch, gather_fn=None,
+            scatter_fn=None) -> jnp.ndarray:
+    e = forward_energy(params, cfg, batch, gather_fn=gather_fn,
+                       scatter_fn=scatter_fn)
+    return jnp.mean((e - batch["energy"].astype(jnp.float32)) ** 2)
+
+
+def forces_fn(params, cfg: NequIPConfig, batch) -> jnp.ndarray:
+    """F = -dE/dpos (autodiff through the equivariant network)."""
+    def etot(pos):
+        return jnp.sum(forward_energy(params, cfg, {**batch, "pos": pos}))
+    return -jax.grad(etot)(batch["pos"])

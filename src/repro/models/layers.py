@@ -1,0 +1,145 @@
+"""Shared neural building blocks (pure JAX, no flax/optax).
+
+Conventions:
+  * params are nested dicts of jnp arrays; a parallel tree of
+    PartitionSpecs is produced by each model's `param_specs`.
+  * compute dtype is configurable (bf16 default); norms/softmax in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray | None, eps: float = 1e-6,
+            offset: float = 0.0) -> jnp.ndarray:
+    """RMSNorm in f32; `offset`=1.0 gives the gemma (1+scale) convention."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (offset + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def nonparam_layernorm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """OLMo's non-parametric LayerNorm: normalize, no scale/bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jnp.ndarray, scale, **kw) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale, **kw)
+    if kind == "rmsnorm_gemma":
+        return rmsnorm(x, scale, offset=1.0, **kw)
+    if kind == "nonparam_ln":
+        return nonparam_layernorm(x)
+    raise ValueError(kind)
+
+
+def norm_param(kind: str, d: int) -> jnp.ndarray | None:
+    if kind == "nonparam_ln":
+        return None
+    if kind == "rmsnorm_gemma":
+        return jnp.zeros((d,), jnp.float32)   # (1 + scale) convention
+    return jnp.ones((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+def act_fn(kind: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[kind]
+
+
+def gated_mlp(x: jnp.ndarray, w_gate, w_in, w_out, activation: str = "silu"):
+    """SwiGLU / GeGLU: act(x @ w_gate) * (x @ w_in) @ w_out."""
+    g = act_fn(activation)(x @ w_gate)
+    return (g * (x @ w_in)) @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(dh: int, theta: float = 10000.0) -> jnp.ndarray:
+    """(dh//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x (..., S, H, Dh), positions (..., S) int32 -> rotated x (split halves
+    convention, matching llama/gemma reference implementations)."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    std = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent_chunked(logits_fn, x: jnp.ndarray, labels: jnp.ndarray,
+                         n_chunks: int = 8) -> jnp.ndarray:
+    """Cross-entropy over vocab-sharded logits, scanned over seq chunks so
+    the live logits tensor is (B, S/n_chunks, V) instead of (B, S, V).
+
+    logits_fn: (B, s, d) -> (B, s, V) (the lm head; sharding-constrained
+    inside).  x: (B, S, d) final hidden states.  labels: (B, S) int32.
+    """
+    b, s, d = x.shape
+    assert s % n_chunks == 0, (s, n_chunks)
+    cs = s // n_chunks
+    xc = x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        xi, li = inp
+        logits = logits_fn(xi).astype(jnp.float32)          # (B, cs, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    # checkpoint: without it the scan saves every chunk's logits for the
+    # backward pass and chunking saves nothing (measured ~8 GiB on gemma)
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0), (xc, lc))
+    return total / (b * s)
+
+
+def constrain(x: jnp.ndarray, spec: P | None):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,1 @@
+"""RecSys: DIN (Deep Interest Network) + sharded embedding substrate."""

@@ -1,0 +1,203 @@
+"""DIN: Deep Interest Network [arXiv:1706.06978].
+
+Assigned config: embed_dim=18, behavior seq_len=100, attention MLP 80-40,
+final MLP 200-80, target attention interaction.
+
+Per-behavior feature = [item_emb || cate_emb] (2*18=36).  Target attention
+scores each history behavior against the candidate with
+MLP([e_h, e_t, e_h - e_t, e_h * e_t]) (80-40-1, unnormalized weights as in
+the paper), producing the user-interest vector; final MLP
+(interest || target || sum-pooled history) -> 200 -> 80 -> 1 -> sigmoid.
+
+Four serving shapes:
+  train_batch / serve_p99 / serve_bulk -- the scoring step below.
+  retrieval_cand -- 1 query vs 10^6 candidates: scored as a cascade:
+    (a) interest-vector vs candidate-embedding distances via the fused
+        l2_topk kernel (the paper's exact workload -- the BAMG engine
+        serves the same query in examples/din_retrieval.py), then
+    (b) full DIN re-rank of the top candidates.
+
+Embedding tables are row-sharded over `model`
+(models/recsys/embedding.py); batch shards over data axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..layers import dense_init
+from .embedding import embedding_bag, sharded_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    n_items: int = 1_000_000
+    n_cates: int = 1024
+    rerank_k: int = 1024     # cascade width for retrieval_cand
+
+    @property
+    def d_feat(self) -> int:
+        return 2 * self.embed_dim  # item || cate
+
+
+def init_params(cfg: DINConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 12)
+    d = cfg.d_feat
+    attn_sizes = (4 * d,) + tuple(cfg.attn_mlp) + (1,)
+    mlp_sizes = (3 * d,) + tuple(cfg.mlp) + (1,)
+    return {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, cfg.embed_dim)) * 0.05,
+        "cate_emb": jax.random.normal(ks[1], (cfg.n_cates, cfg.embed_dim)) * 0.05,
+        "attn": {"w": [dense_init(ks[2 + i], attn_sizes[i], attn_sizes[i + 1])
+                       for i in range(len(attn_sizes) - 1)],
+                 "b": [jnp.zeros((attn_sizes[i + 1],))
+                       for i in range(len(attn_sizes) - 1)]},
+        "mlp": {"w": [dense_init(ks[6 + i], mlp_sizes[i], mlp_sizes[i + 1])
+                      for i in range(len(mlp_sizes) - 1)],
+                "b": [jnp.zeros((mlp_sizes[i + 1],))
+                      for i in range(len(mlp_sizes) - 1)]},
+    }
+
+
+def param_specs(cfg: DINConfig, mesh: Optional[Mesh], model_axis="model"):
+    if mesh is None:
+        return jax.tree.map(lambda _: None, jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(0))))
+    rep = P()
+    return {
+        "item_emb": P(model_axis, None),
+        "cate_emb": P(model_axis, None),
+        "attn": {"w": [rep] * (len(cfg.attn_mlp) + 1),
+                 "b": [rep] * (len(cfg.attn_mlp) + 1)},
+        "mlp": {"w": [rep] * (len(cfg.mlp) + 1),
+                "b": [rep] * (len(cfg.mlp) + 1)},
+    }
+
+
+def _mlp(p, x, final_sigmoid=False):
+    n = len(p["w"])
+    for i in range(n):
+        x = x @ p["w"][i].astype(x.dtype) + p["b"][i].astype(x.dtype)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return jax.nn.sigmoid(x) if final_sigmoid else x
+
+
+def _behavior_embed(params, cfg, items, cates, mesh, model_axis, batch_axes):
+    ei = sharded_lookup(params["item_emb"], items, mesh, model_axis, batch_axes)
+    ec = sharded_lookup(params["cate_emb"], cates, mesh, model_axis, batch_axes)
+    return jnp.concatenate([ei, ec], axis=-1)         # (..., 2*embed)
+
+
+def target_attention(params, e_hist, e_tgt, hist_len):
+    """e_hist (B, S, d), e_tgt (B, d) -> interest (B, d).
+
+    Unnormalized attention weights (paper); invalid positions masked to 0."""
+    b, s, d = e_hist.shape
+    et = jnp.broadcast_to(e_tgt[:, None, :], (b, s, d))
+    feats = jnp.concatenate([e_hist, et, e_hist - et, e_hist * et], -1)
+    w = _mlp(params["attn"], feats)[..., 0]           # (B, S)
+    mask = jnp.arange(s)[None, :] < hist_len[:, None]
+    w = jnp.where(mask, w, 0.0)
+    return jnp.einsum("bs,bsd->bd", w, e_hist)
+
+
+def forward_scores(params, cfg: DINConfig, batch, mesh=None,
+                   model_axis="model", batch_axes=()) -> jnp.ndarray:
+    """CTR logits (B,). batch: hist_items/hist_cates (B, S), hist_len (B,),
+    target_item/target_cate (B,)."""
+    e_hist = _behavior_embed(params, cfg, batch["hist_items"],
+                             batch["hist_cates"], mesh, model_axis, batch_axes)
+    e_tgt = _behavior_embed(params, cfg, batch["target_item"],
+                            batch["target_cate"], mesh, model_axis, batch_axes)
+    interest = target_attention(params, e_hist, e_tgt, batch["hist_len"])
+    # sum-pooled history via embedding_bag (take + segment_sum)
+    b, s = batch["hist_items"].shape
+    seg = jnp.repeat(jnp.arange(b, dtype=jnp.int32), s)
+    mask_ids = jnp.where(
+        jnp.arange(s)[None, :] < batch["hist_len"][:, None],
+        batch["hist_items"], -1).reshape(-1)
+    pooled_i = embedding_bag(params["item_emb"], mask_ids, seg, b, mode="mean")
+    mask_cates = jnp.where(
+        jnp.arange(s)[None, :] < batch["hist_len"][:, None],
+        batch["hist_cates"], -1).reshape(-1)
+    pooled_c = embedding_bag(params["cate_emb"], mask_cates, seg, b, mode="mean")
+    pooled = jnp.concatenate([pooled_i, pooled_c], -1)
+    x = jnp.concatenate([interest, e_tgt, pooled], -1)
+    return _mlp(params["mlp"], x)[..., 0]             # logits
+
+
+def loss_fn(params, cfg: DINConfig, batch, mesh=None, model_axis="model",
+            batch_axes=()) -> jnp.ndarray:
+    logits = forward_scores(params, cfg, batch, mesh, model_axis, batch_axes)
+    y = batch["label"].astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval cascade (retrieval_cand shape)
+# ---------------------------------------------------------------------------
+def user_interest_vector(params, cfg: DINConfig, batch, mesh=None,
+                         model_axis="model", batch_axes=()) -> jnp.ndarray:
+    """Query-side vector for ANN retrieval: mean-pooled behavior embedding
+    (target-independent -- usable against an item-embedding index)."""
+    e_hist = _behavior_embed(params, cfg, batch["hist_items"],
+                             batch["hist_cates"], mesh, model_axis, batch_axes)
+    s = e_hist.shape[1]
+    mask = (jnp.arange(s)[None, :] < batch["hist_len"][:, None])
+    pooled = jnp.sum(jnp.where(mask[..., None], e_hist, 0.0), 1)
+    return pooled / jnp.maximum(batch["hist_len"], 1)[:, None].astype(pooled.dtype)
+
+
+def retrieval_step(params, cfg: DINConfig, batch, n_candidates: int,
+                   k: int = 100, mesh=None, model_axis="model",
+                   batch_axes=(), backend: str = "auto"):
+    """Score 1..B queries against the first `n_candidates` rows of the item
+    table: L2 shortlist in embedding space (fused l2_topk kernel, candidate
+    rows stay model-sharded -- the matmul is fully local per shard) ->
+    full DIN re-rank of the top rerank_k.
+
+    This is exactly the paper's ANN workload; examples/din_retrieval.py
+    serves the same query through the BAMG index instead of brute force.
+    Returns (scores (B, k), item ids (B, k)).
+    """
+    from ...kernels.l2_topk import l2_topk
+    # query = mean item-embedding of the history (item space, not concat --
+    # the candidate side must live in the same space as the table rows)
+    e_hist_items = sharded_lookup(params["item_emb"], batch["hist_items"],
+                                  mesh, model_axis, batch_axes)
+    s = e_hist_items.shape[1]
+    hmask = jnp.arange(s)[None, :] < batch["hist_len"][:, None]
+    q = (jnp.sum(jnp.where(hmask[..., None], e_hist_items, 0.0), 1)
+         / jnp.maximum(batch["hist_len"], 1)[:, None].astype(e_hist_items.dtype))
+    cand_table = (params["item_emb"] if n_candidates == params["item_emb"].shape[0]
+                  else params["item_emb"][:n_candidates])   # model-sharded rows
+    kk = min(cfg.rerank_k, n_candidates)
+    _, short = l2_topk(q, cand_table, kk, backend=backend)  # (B, kk)
+    b = q.shape[0]
+    short_items = jnp.clip(short, 0, n_candidates - 1).astype(jnp.int32)
+
+    def rerank_one(hist_i, hist_c, hlen, items_b):
+        sub = {"hist_items": jnp.broadcast_to(hist_i, (kk,) + hist_i.shape),
+               "hist_cates": jnp.broadcast_to(hist_c, (kk,) + hist_c.shape),
+               "hist_len": jnp.broadcast_to(hlen, (kk,)),
+               "target_item": items_b,
+               "target_cate": (items_b % cfg.n_cates).astype(jnp.int32)}
+        return forward_scores(params, cfg, sub, mesh=None)  # local rerank
+
+    scores = jax.vmap(rerank_one)(batch["hist_items"], batch["hist_cates"],
+                                  batch["hist_len"], short_items)  # (B, kk)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(short_items, top_i, axis=1)
+    return top_s, ids

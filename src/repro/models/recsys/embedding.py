@@ -1,0 +1,70 @@
+"""Sharded embedding substrate for recsys (kernel_taxonomy §RecSys).
+
+JAX has no native EmbeddingBag and no CSR sparse -- we build both pieces:
+
+  * `embedding_bag`: take + segment_sum pooled lookup (sum/mean), the hot
+    path of every recsys model.
+  * `sharded_lookup`: Megatron-style row-sharded table lookup under
+    shard_map (masked local take + psum over the model axis) -- the same
+    vocab-parallel pattern the LM embedding uses; tables of 10^6..10^9 rows
+    shard over `model` and are never gathered.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def embedding_bag(table: jnp.ndarray, flat_ids: jnp.ndarray,
+                  segment_ids: jnp.ndarray, n_segments: int,
+                  mode: str = "sum",
+                  weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Pooled lookup: out[s] = pool_{i: seg[i]=s} table[flat_ids[i]].
+
+    flat_ids (M,) int32 (negative = padding); segment_ids (M,) int32.
+    """
+    ok = flat_ids >= 0
+    rows = table[jnp.clip(flat_ids, 0, table.shape[0] - 1)]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    rows = jnp.where(ok[:, None], rows, 0.0)
+    seg = jnp.where(ok, segment_ids, n_segments)
+    out = jax.ops.segment_sum(rows, seg, num_segments=n_segments + 1)[:n_segments]
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(ok.astype(rows.dtype), seg,
+                                  num_segments=n_segments + 1)[:n_segments]
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def sharded_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                   mesh: Optional[Mesh], model_axis: Optional[str],
+                   batch_axes: tuple = ()) -> jnp.ndarray:
+    """Row-sharded table[ids]: masked local take + psum over `model_axis`.
+
+    ids may have any shape (leading dim sharded over batch_axes); the table
+    is sharded P(model_axis, None).  Without a mesh: plain take.
+    """
+    if mesh is None or model_axis is None or model_axis not in mesh.axis_names:
+        return table[jnp.clip(ids, 0, table.shape[0] - 1)]
+    from jax.experimental.shard_map import shard_map
+    tp = mesh.devices.shape[mesh.axis_names.index(model_axis)]
+    v_local = table.shape[0] // tp
+    ba = batch_axes if batch_axes else None
+    id_spec = P(ba, *([None] * (ids.ndim - 1)))
+    out_spec = P(ba, *([None] * ids.ndim))
+
+    def body(tab_l, ids_l):
+        off = jax.lax.axis_index(model_axis) * v_local
+        loc = ids_l.astype(jnp.int32) - off
+        ok = (loc >= 0) & (loc < v_local)
+        rows = tab_l[jnp.clip(loc, 0, v_local - 1)]
+        rows = jnp.where(ok[..., None], rows, 0.0)
+        return jax.lax.psum(rows, model_axis)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(model_axis, None), id_spec),
+                     out_specs=out_spec, check_rep=False)(table, ids)

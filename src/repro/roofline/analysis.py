@@ -1,0 +1,104 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e target).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_traffic_per_device / HBM_bw
+  collective term = weighted collective bytes / ICI link bw
+
+HLO numbers come from the loop-corrected parser (roofline/hlo_parse.py --
+XLA's cost_analysis does not multiply while bodies).  Per-device shapes:
+compiled.as_text() is post-SPMD.
+
+Collective weighting (ring algorithms, P = participating devices):
+  all-reduce      2 (P-1)/P   ~ 2x payload over the slowest link
+  all-gather      (P-1)/P     (payload = gathered output, counted as the
+                               shard each device must receive)
+  reduce-scatter  (P-1)/P
+  all-to-all      (P-1)/P     (each device keeps 1/P of its payload)
+  collective-permute 1
+We report the simple x2 / x1 weights (P large) -- the error is O(1/P).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .hlo_parse import analyze_compiled_text
+
+# TPU v5e per chip (brief-specified constants)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+COLL_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device, loop-corrected
+    traffic_bytes: float          # per device
+    collective_bytes: float       # weighted, per device
+    collectives: dict             # raw per-kind bytes
+    model_flops: float            # analytic useful FLOPs (whole step, global)
+    n_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.traffic_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time (no overlap assumption: max of terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x devices): compiled-compute usefulness."""
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.n_devices / self.t_bound) / PEAK_FLOPS
+
+    def summary(self) -> dict:
+        return {
+            "hlo_flops_per_dev": self.flops,
+            "traffic_bytes_per_dev": self.traffic_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "collectives": self.collectives,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def roofline_from_text(hlo_text: str, model_flops: float,
+                       n_devices: int) -> Roofline:
+    agg = analyze_compiled_text(hlo_text)
+    coll = agg["collectives"]
+    weighted = sum(COLL_WEIGHT.get(k, 1.0) * v for k, v in coll.items())
+    return Roofline(flops=agg["flops"], traffic_bytes=agg["traffic_bytes"],
+                    collective_bytes=weighted, collectives=coll,
+                    model_flops=model_flops, n_devices=n_devices)

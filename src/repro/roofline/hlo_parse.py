@@ -1,0 +1,241 @@
+"""Optimized-HLO text parser: loop-corrected FLOPs, memory traffic, and
+per-collective byte counts.
+
+Why not compiled.cost_analysis(): XLA reports while-loop bodies ONCE, not
+times their trip count -- a scanned 28-layer transformer under-reports
+FLOPs ~28x (measured).  We parse `compiled.as_text()` (post-SPMD, i.e.
+*per-device* shapes), build the computation call graph, extract loop trip
+counts from the loop-condition compare-against-constant pattern, and
+propagate multipliers.
+
+Accounting per computation:
+  flops            2 * prod(dot output shape) * prod(contracting dims)
+  traffic_bytes    output bytes of every materializing op (post-fusion, so
+                   this approximates HBM write traffic; reads ~ equal)
+  coll_bytes[kind] payload bytes for all-reduce / all-gather /
+                   reduce-scatter / all-to-all / collective-permute
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_ATTR_RES = {
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+SKIP_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+            "bitcast(", "after-all(", "partition-id(", "replica-id(",
+            "iota(")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    whiles: list = dataclasses.field(default_factory=list)   # (cond, body, trips)
+    calls: list = dataclasses.field(default_factory=list)    # plain callees
+    consts_s32: list = dataclasses.field(default_factory=list)
+
+
+def _dot_flops(rhs: str, types: dict) -> float:
+    """FLOPs of one dot line.  Operand types are looked up in the
+    per-computation symbol table (optimized HLO omits inline types)."""
+    out_dims = _shape_dims(rhs)
+    if out_dims is None:
+        return 0.0
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    try:
+        paren = rhs.index("dot(")
+    except ValueError:
+        return 0.0
+    args = rhs[paren + 4:]
+    lhs_dims = None
+    inline = _SHAPE_RE.search(args.split(",")[0])
+    if inline:
+        g2 = inline.group(2)
+        lhs_dims = [int(d) for d in g2.split(",")] if g2 else []
+    else:
+        om = _OPERAND_RE.search(args)
+        if om and om.group(1) in types:
+            lhs_dims = _shape_dims(types[om.group(1)])
+    contract = 1
+    if mdims and lhs_dims is not None:
+        for ci in mdims.group(1).split(","):
+            if ci != "" and int(ci) < len(lhs_dims):
+                contract *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def parse_hlo(text: str) -> dict[str, CompStats]:
+    """Parse module text into per-computation stats."""
+    comps: dict[str, CompStats] = {}
+    entry_name = [None]
+    cur: CompStats | None = None
+    types: dict[str, str] = {}
+    for line in text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$", ls)
+        if m:
+            cur = comps.setdefault(m.group(2), CompStats())
+            types = {}
+            if m.group(1):
+                entry_name[0] = m.group(2)
+            continue
+        if cur is None:
+            continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        om = _OP_RE.match(ls)
+        if not om:
+            continue
+        name, rhs = om.group(1), om.group(2)
+        types[name] = rhs.split("(")[0]
+        cm = _CONST_RE.search(ls)
+        if cm:
+            cur.consts_s32.append(int(cm.group(1)))
+        opname_part = rhs[:96]
+        if any(s in opname_part for s in SKIP_OPS):
+            continue
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(?:-start)?\(", rhs):
+                cur.coll[c] += shape_bytes(rhs.split("(")[0])
+                break
+        if re.search(r"\bdot(?:_general)?\w*\s*=|\bdot\(", rhs) \
+                and " dot(" in " " + rhs:
+            cur.flops += _dot_flops(rhs, types)
+        cur.traffic += shape_bytes(rhs.split("(")[0])
+        if " while(" in rhs or rhs.startswith("while("):
+            cm2 = _ATTR_RES["condition"].search(rhs)
+            bm = _ATTR_RES["body"].search(rhs)
+            tm = _TRIP_RE.search(rhs)
+            trips = float(tm.group(1)) if tm else None
+            if cm2 and bm:
+                cur.whiles.append((cm2.group(1), bm.group(1), trips))
+        else:
+            is_fusion = " fusion(" in " " + rhs
+            for key in ("calls", "to_apply"):
+                am = _ATTR_RES[key].search(rhs)
+                if am:
+                    cur.calls.append((am.group(1), is_fusion))
+            bm = _ATTR_RES["branches"].search(rhs)
+            if bm:
+                for c in bm.group(1).split(","):
+                    cur.calls.append((c.strip().lstrip("%"), False))
+    comps["__entry__"] = comps.get(entry_name[0], CompStats()) \
+        if entry_name[0] else CompStats()
+    if entry_name[0]:
+        comps["__entry_name__"] = entry_name[0]  # type: ignore
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> float:
+    """Trip count heuristic: largest s32 constant in the loop condition."""
+    cond = comps.get(cond_name)
+    if cond is not None and getattr(cond, "consts_s32", None):
+        return float(max(cond.consts_s32))
+    return 1.0
+
+
+def aggregate(comps: dict) -> dict:
+    entry = comps.get("__entry_name__")
+    if not isinstance(entry, str):
+        called = set()
+        for n, st in comps.items():
+            if not isinstance(st, CompStats):
+                continue
+            called.update(c for c, _f in st.calls)
+            for cond, body, _t in st.whiles:
+                called.add(cond)
+                called.add(body)
+        cands = [n for n, st in comps.items()
+                 if isinstance(st, CompStats) and n not in called
+                 and not n.startswith("__")]
+        entry = cands[0] if cands else None
+
+    memo: dict[str, tuple] = {}
+
+    def roll(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        st = comps.get(name)
+        if not isinstance(st, CompStats) or depth > 64:
+            return (0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        flops, traffic = st.flops, st.traffic
+        coll = defaultdict(float, st.coll)
+        for callee, is_fusion in st.calls:
+            f2, t2, c2 = roll(callee, depth + 1)
+            flops += f2
+            # fusion internals never touch HBM: count flops, skip traffic
+            if not is_fusion:
+                traffic += t2
+            for k, v in c2.items():
+                coll[k] += v
+        for cond, body, trips in st.whiles:
+            if trips is None:
+                trips = _trip_count(comps, cond)
+            f2, t2, c2 = roll(body, depth + 1)
+            flops += trips * f2
+            traffic += trips * t2
+            for k, v in c2.items():
+                coll[k] += trips * v
+        memo[name] = (flops, traffic, dict(coll))
+        return memo[name]
+
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0, "collectives": {},
+                "entry": None}
+    flops, traffic, coll = roll(entry)
+    return {"flops": flops, "traffic_bytes": traffic,
+            "collectives": coll, "entry": entry}
+
+
+def analyze_compiled_text(text: str) -> dict:
+    return aggregate(parse_hlo(text))

@@ -1,0 +1,112 @@
+"""Fault tolerance: checkpoint/restart orchestration + failure injection.
+
+At 1000+ nodes the relevant failure modes and this framework's answers:
+
+  node loss / preemption     atomic checkpoints every `ckpt_every` steps
+                             (train/checkpoint.py); restart resumes from
+                             the latest step; the stateless step-indexed
+                             data pipeline replays the exact stream.
+  changed topology           elastic restore: restore_sharded device_puts
+  (lose a pod, resize DP)    host arrays under the *new* mesh; ZeRO-1
+                             moment shards re-partition automatically.
+  mid-save crash             tmp-file + os.replace: the previous
+                             checkpoint stays valid.
+  stragglers                 (a) bounded per-step host work: generation is
+                             O(batch) with a prefetch thread; (b) the
+                             scan-over-microbatches step gives XLA slack to
+                             overlap a slow replica's collective; (c) the
+                             async checkpointer keeps serialization off the
+                             step path.  On real multi-host TPU, slow-host
+                             detection would sit in the launcher
+                             (launch/train.py polls step latency EWMA and
+                             reports outliers).
+
+`run_with_recovery` drives a training loop with optional injected failures
+(used by tests to prove restart-equivalence: a run killed at step k and
+resumed matches the uninterrupted run bit-for-bit on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt
+
+
+class SimulatedFailure(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    async_save: bool = True
+
+
+def run_loop(state, step_fn: Callable, batch_fn: Callable, n_steps: int,
+             ft: FTConfig, fail_at: Optional[int] = None,
+             log_every: int = 0) -> tuple[Any, list]:
+    """Run from state["step"] to n_steps, checkpointing; optionally raise a
+    SimulatedFailure after completing step `fail_at` (before its save)."""
+    saver = ckpt.AsyncCheckpointer(ft.ckpt_dir, keep=ft.keep)
+    metrics_log = []
+    start = int(state["step"])
+    ewma = None
+    for s in range(start, n_steps):
+        t0 = time.perf_counter()
+        batch = batch_fn(s)
+        state, m = step_fn(state, batch)
+        if log_every and (s + 1) % log_every == 0:
+            m = {k: float(v) for k, v in m.items()}
+            metrics_log.append((s + 1, m))
+        dt = time.perf_counter() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt  # straggler probe
+        if fail_at is not None and s + 1 == fail_at:
+            raise SimulatedFailure(f"injected failure after step {s + 1}")
+        if (s + 1) % ft.ckpt_every == 0 or s + 1 == n_steps:
+            if ft.async_save:
+                saver.save(s + 1, state)
+            else:
+                ckpt.save(ft.ckpt_dir, s + 1, state)
+    saver.wait()
+    return state, metrics_log
+
+
+def resume_or_init(init_fn: Callable[[], Any], ft: FTConfig,
+                   shardings=None) -> Any:
+    """Restore the latest checkpoint if present, else fresh init."""
+    step = ckpt.latest_step(ft.ckpt_dir)
+    state = init_fn()
+    if step is None:
+        return state
+    if shardings is not None:
+        state, _ = ckpt.restore_sharded(ft.ckpt_dir, state, shardings)
+    else:
+        host, _ = ckpt.restore(ft.ckpt_dir, state)
+        state = jax.tree.map(jax.numpy.asarray, host)
+    return state
+
+
+def run_with_recovery(init_fn, step_fn, batch_fn, n_steps, ft: FTConfig,
+                      fail_at: Optional[int] = None, max_restarts: int = 3):
+    """Training with automatic restart-from-checkpoint on failure."""
+    attempts = 0
+    logs = []
+    while True:
+        state = resume_or_init(init_fn, ft)
+        try:
+            state, mlog = run_loop(state, step_fn, batch_fn, n_steps, ft,
+                                   fail_at=fail_at)
+            logs.extend(mlog)
+            return state, logs, attempts
+        except SimulatedFailure:
+            attempts += 1
+            fail_at = None  # fail only once per run_with_recovery call
+            if attempts > max_restarts:
+                raise

@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    """Clustered corpus + queries + exact ground truth (session-cached)."""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.data.synthetic import make_vector_dataset
+    return make_vector_dataset("test", n=600, d=24, nq=12, k_gt=10,
+                               n_clusters=12, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_points():
+    rng = np.random.default_rng(42)
+    return rng.normal(size=(40, 6)).astype(np.float32)

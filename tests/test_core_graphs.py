@@ -1,0 +1,129 @@
+"""Graph-construction properties: RNG/MRNG/BMRNG (paper §2-3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.block_assign import (block_members, bnf_blocks, random_blocks,
+                                     uniform_blocks)
+from repro.core.bmrng import build_bmrng, io_length, monotonic_io_path
+from repro.core.distances import exact_knn, knn_graph, pairwise_sq_l2
+from repro.core.graph_build import build_nsg, build_vamana, degree_stats
+from repro.core.rng_rules import has_monotonic_path, mrng_edges, rng_edges
+
+
+def _points(n, d, seed):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def test_rng_subset_of_mrng_outedges():
+    x = _points(30, 3, 0)
+    rng_adj = rng_edges(x)
+    mrng_adj = mrng_edges(x)
+    # every undirected RNG edge appears in MRNG (MRNG keeps strictly more)
+    assert np.all(mrng_adj[rng_adj]), "MRNG must contain RNG edges"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_mrng_monotonic_property(seed):
+    """Theorem 3 of [15]: MRNG admits a monotone path between any pair."""
+    x = _points(18, 3, seed)
+    d = pairwise_sq_l2(x, x)
+    adj = mrng_edges(x, d)
+    n = len(x)
+    for u in range(0, n, 5):
+        for q in range(n):
+            if u != q:
+                assert has_monotonic_path(adj, d, u, q), (u, q)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 8))
+def test_bmrng_theorem1_monotonic_io_path(seed, cap):
+    """Theorem 1: BMRNG admits a monotonic I/O path between any two nodes."""
+    x = _points(20, 3, seed)
+    blocks = random_blocks(len(x), cap, seed=seed)
+    g = build_bmrng(x, blocks)
+    for u in range(0, len(x), 4):
+        for q in range(len(x)):
+            if u == q:
+                continue
+            path = monotonic_io_path(g.adj, g.dist, g.blocks, u, q)
+            assert path is not None, f"no monotonic I/O path {u}->{q}"
+            # Definition 3: edges exist; intra-segment steps strictly
+            # decrease; consecutive block-segment END nodes strictly decrease
+            dq = g.dist[:, q]
+            seg_end_prev = np.inf
+            for i, (a, b) in enumerate(zip(path, path[1:])):
+                assert g.adj[a, b], f"non-edge {a}->{b}"
+                if g.blocks[a] == g.blocks[b]:
+                    assert dq[b] < dq[a], "intra-block step must decrease"
+                else:
+                    assert dq[a] < seg_end_prev, "segment end must decrease"
+                    seg_end_prev = dq[a]
+            assert dq[path[-1]] == 0.0 or path[-1] == q
+            assert io_length(path, g.blocks) >= 1
+
+
+def test_bmrng_sparser_than_mrng_same_io():
+    """Block-awareness should remove cross-block edges vs plain MRNG."""
+    x = _points(40, 4, 7)
+    blocks = uniform_blocks(len(x), 8)
+    g = build_bmrng(x, blocks)
+    m = mrng_edges(x)
+    same = blocks[:, None] == blocks[None, :]
+    cross_bmrng = int((g.adj & ~same).sum())
+    cross_mrng = int((m & ~same).sum())
+    assert cross_bmrng <= cross_mrng
+
+
+def test_bnf_blocks_partition_and_locality():
+    x = _points(200, 8, 1)
+    adj = knn_graph(x, 8)
+    c = 10
+    blocks = bnf_blocks(adj, c, seed=0)
+    assert blocks.min() >= 0 and len(blocks) == 200
+    counts = np.bincount(blocks)
+    assert counts.max() <= c
+    members = block_members(blocks, c)
+    got = sorted(v for row in members for v in row if v >= 0)
+    assert got == list(range(200))
+    # BNF should beat random assignment on intra-block edge fraction
+    from repro.core.block_assign import intra_edge_fraction
+    rnd = random_blocks(200, c, seed=0)
+    assert (intra_edge_fraction(adj, blocks)
+            > intra_edge_fraction(adj, rnd))
+
+
+def test_vamana_and_nsg_reachability():
+    x = _points(300, 8, 3)
+    for builder in (build_vamana, build_nsg):
+        adj, entry = builder(x, r=12, l_build=24)
+        # BFS from entry reaches (almost) everything
+        seen = np.zeros(len(x), bool)
+        stack = [entry]
+        seen[entry] = True
+        while stack:
+            v = stack.pop()
+            for u in adj[v]:
+                if u >= 0 and not seen[u]:
+                    seen[u] = True
+                    stack.append(int(u))
+        assert seen.mean() > 0.98, builder.__name__
+
+
+def test_degree_stats_split():
+    adj = np.array([[1, 2], [0, -1], [-1, -1]], np.int32)
+    blocks = np.array([0, 0, 1], np.int32)
+    s = degree_stats(adj, blocks)
+    assert s["total"] == pytest.approx(1.0)
+    assert s["intra"] == pytest.approx(2 / 3)
+    assert s["cross"] == pytest.approx(1 / 3)
+
+
+def test_exact_knn_matches_bruteforce():
+    x = _points(100, 5, 9)
+    q = _points(7, 5, 10)
+    d, ids = exact_knn(x, q, 5)
+    ref = np.argsort(((q[:, None] - x[None]) ** 2).sum(-1), axis=1)[:, :5]
+    assert (ids == ref).mean() > 0.99

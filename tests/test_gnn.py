@@ -1,0 +1,183 @@
+"""GNN substrate: segment message passing, SO(3) machinery, equivariance
+property tests, sampler, triplets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import molecules_batch, random_graph
+from repro.models.gnn.common import (bessel_rbf, degree, edge_vectors,
+                                     scatter_to_nodes)
+from repro.models.gnn.sampler import (csr_from_edges, expected_sizes,
+                                      padded_sample, sample_subgraph)
+from repro.models.gnn.so3 import (_random_rotations, allowed_paths, real_cg,
+                                  real_sph_harm_np, wigner_d_real_np)
+
+
+# --- segment ops ------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_scatter_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    n, e, d = 20, 60, 4
+    src = rng.integers(-1, n, e).astype(np.int32)   # -1 = padding
+    dst = rng.integers(0, n, e).astype(np.int32)
+    msg = rng.normal(size=(e, d)).astype(np.float32)
+    out = np.asarray(scatter_to_nodes(jnp.asarray(msg), jnp.asarray(dst),
+                                      n, jnp.asarray(src >= 0)))
+    ref = np.zeros((n, d), np.float32)
+    for i in range(e):
+        if src[i] >= 0:
+            ref[dst[i]] += msg[i]
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_mean_and_max():
+    msg = jnp.asarray([[1.0], [3.0], [5.0]])
+    dst = jnp.asarray([0, 0, 1], jnp.int32)
+    mask = jnp.asarray([True, True, True])
+    mean = scatter_to_nodes(msg, dst, 2, mask, agg="mean")
+    mx = scatter_to_nodes(msg, dst, 2, mask, agg="max")
+    np.testing.assert_allclose(np.asarray(mean)[:, 0], [2.0, 5.0])
+    np.testing.assert_allclose(np.asarray(mx)[:, 0], [3.0, 5.0])
+
+
+def test_degree_counts():
+    dst = jnp.asarray([0, 0, 1, -1], jnp.int32)
+    deg = degree(dst, 3)
+    np.testing.assert_allclose(np.asarray(deg), [2, 1, 0])
+
+
+def test_edge_vectors_unit_norm():
+    pos = jnp.asarray(np.random.default_rng(0).normal(size=(10, 3)),
+                      jnp.float32)
+    src = jnp.asarray([0, 1, 2], jnp.int32)
+    dst = jnp.asarray([3, 4, 5], jnp.int32)
+    u, r = edge_vectors(pos, src, dst)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(u), axis=1), 1.0,
+                               rtol=1e-5)
+    assert (np.asarray(r) > 0).all()
+
+
+def test_bessel_rbf_cutoff():
+    r = jnp.asarray([0.5, 4.9, 5.1, 10.0])
+    rbf = np.asarray(bessel_rbf(r, 4, 5.0))
+    assert np.abs(rbf[2:]).max() < 1e-3   # beyond cutoff ~ 0
+
+
+# --- SO(3) -------------------------------------------------------------------
+def test_sph_harm_orthonormal():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(200000, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    for l in (0, 1, 2):
+        y = real_sph_harm_np(l, v)
+        gram = 4 * np.pi * (y.T @ y) / len(v)
+        np.testing.assert_allclose(gram, np.eye(2 * l + 1), atol=0.05)
+
+
+def test_wigner_d_composition():
+    rots = _random_rotations(2, seed=3)
+    r12 = rots[0] @ rots[1]
+    for l in (1, 2):
+        d1 = wigner_d_real_np(l, rots[0])
+        d2 = wigner_d_real_np(l, rots[1])
+        d12 = wigner_d_real_np(l, r12)
+        np.testing.assert_allclose(d1 @ d2, d12, atol=1e-6)
+
+
+def test_cg_equivariance_all_paths():
+    for (l1, l2, l3) in allowed_paths(2):
+        c = real_cg(l1, l2, l3)
+        assert c is not None
+        for rr in _random_rotations(2, seed=17):
+            d1, d2, d3 = (wigner_d_real_np(l, rr) for l in (l1, l2, l3))
+            lhs = np.einsum("kij,ia,jb->kab", c, d1, d2)
+            rhs = np.einsum("kl,lab->kab", d3, c)
+            np.testing.assert_allclose(lhs, rhs, atol=1e-6)
+
+
+# --- model-level equivariance -------------------------------------------------
+@pytest.fixture(scope="module")
+def mol_batch():
+    mol, gid = molecules_batch(3, 10, 24, seed=2)
+    return {"species": jnp.asarray(np.abs(mol.labels) % 8, jnp.int32),
+            "pos": jnp.asarray(mol.pos),
+            "edge_src": jnp.asarray(mol.edge_src),
+            "edge_dst": jnp.asarray(mol.edge_dst),
+            "graph_ids": jnp.asarray(gid),
+            "energy": jnp.asarray(np.zeros(3), jnp.float32)}
+
+
+@pytest.mark.parametrize("which", ["nequip", "mace"])
+def test_energy_invariance_under_rotation_translation(which, mol_batch):
+    if which == "nequip":
+        from repro.models.gnn.nequip import NequIPConfig, forward_energy, init_params
+        cfg = NequIPConfig(n_layers=2, channels=8)
+    else:
+        from repro.models.gnn.mace import MACEConfig, forward_energy, init_params
+        cfg = MACEConfig(n_layers=1, channels=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    e0 = forward_energy(params, cfg, mol_batch)
+    r = _random_rotations(1, seed=9)[0]
+    shift = jnp.asarray([1.7, -0.3, 2.2], jnp.float32)
+    rot = dict(mol_batch)
+    rot["pos"] = mol_batch["pos"] @ jnp.asarray(r.T, jnp.float32) + shift
+    e1 = forward_energy(params, cfg, rot)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), rtol=2e-4,
+                               atol=1e-4)
+
+
+def test_nequip_force_equivariance(mol_batch):
+    from repro.models.gnn.nequip import NequIPConfig, forces_fn, init_params
+    cfg = NequIPConfig(n_layers=2, channels=8)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    f = forces_fn(params, cfg, mol_batch)
+    r = jnp.asarray(_random_rotations(1, seed=11)[0], jnp.float32)
+    rot = dict(mol_batch)
+    rot["pos"] = mol_batch["pos"] @ r.T
+    f_rot = forces_fn(params, cfg, rot)
+    np.testing.assert_allclose(np.asarray(f_rot), np.asarray(f @ r.T),
+                               rtol=1e-3, atol=1e-4)
+
+
+# --- sampler + triplets --------------------------------------------------------
+def test_sampler_subgraph_valid():
+    g = random_graph(500, 5000, d_feat=4, seed=5)
+    csr = csr_from_edges(500, g.edge_src, g.edge_dst)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(500, 32, replace=False)
+    nodes, es, ed = sample_subgraph(csr, seeds, [5, 3], rng)
+    assert len(set(nodes.tolist())) == len(nodes)
+    assert es.max() < len(nodes) and ed.max() < len(nodes)
+    # every sampled edge exists in the original graph
+    eset = set(zip(g.edge_src.tolist(), g.edge_dst.tolist()))
+    for s_, d_ in zip(es.tolist()[:50], ed.tolist()[:50]):
+        assert (int(nodes[d_]), int(nodes[s_])) in eset \
+            or (int(nodes[s_]), int(nodes[d_])) in eset
+
+
+def test_padded_sample_fixed_shape_and_determinism():
+    g = random_graph(400, 4000, d_feat=6, seed=6)
+    csr = csr_from_edges(400, g.edge_src, g.edge_dst)
+    mn, me = expected_sizes(16, [4, 2])
+    a = padded_sample(csr, g.node_feat, g.labels, 16, [4, 2], step=3,
+                      max_nodes=mn, max_edges=me, seed=1)
+    b = padded_sample(csr, g.node_feat, g.labels, 16, [4, 2], step=3,
+                      max_nodes=mn, max_edges=me, seed=1)
+    np.testing.assert_array_equal(a["edge_src"], b["edge_src"])
+    assert a["node_feat"].shape == (mn, 6)
+
+
+def test_triplets_share_pivot_node():
+    mol, _ = molecules_batch(1, 12, 30, seed=3)
+    from repro.models.gnn.dimenet import build_triplets
+    ti, to = build_triplets(mol.edge_src, mol.edge_dst)
+    for a, b in zip(ti.tolist()[:100], to.tolist()[:100]):
+        if a < 0:
+            continue
+        # edge_in (k->j) ends where edge_out (j->i) starts
+        assert mol.edge_dst[a] == mol.edge_src[b]
+        # no immediate backtrack k == i
+        assert mol.edge_src[a] != mol.edge_dst[b]

@@ -1,0 +1,106 @@
+"""End-to-end index behaviour: recall, NIO accounting, persistence (§4-5)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (BAMGIndex, BAMGParams, DiskANNIndex,
+                               DiskANNParams, StarlingIndex, StarlingParams)
+
+
+@pytest.fixture(scope="module")
+def indexes(small_corpus):
+    ds = small_corpus
+    bamg = BAMGIndex.build(ds.base, BAMGParams(alpha=3, beta=1.05, r=16,
+                                               l_build=32, knn_k=16))
+    return ds, bamg
+
+
+def test_bamg_recall_and_io_accounting(indexes):
+    ds, idx = indexes
+    st = idx.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+    assert st.recall >= 0.9, st
+    assert st.mean_graph_reads > 0 and st.mean_vector_reads > 0
+    assert st.mean_nio == pytest.approx(
+        st.mean_graph_reads + st.mean_vector_reads)
+
+
+def test_bamg_recall_improves_with_l(indexes):
+    ds, idx = indexes
+    lo = idx.search_batch(ds.queries, k=10, l=12, gt=ds.gt)
+    hi = idx.search_batch(ds.queries, k=10, l=64, gt=ds.gt)
+    assert hi.recall >= lo.recall
+    assert hi.mean_nio >= lo.mean_nio
+
+
+def test_early_stop_rerank_cuts_vector_reads(indexes):
+    ds, idx = indexes
+    base = idx.search_batch(ds.queries, k=10, l=64, gt=ds.gt)
+    es = idx.search_batch(ds.queries, k=10, l=64, gt=ds.gt,
+                          rerank_margin=1.3)
+    assert es.mean_vector_reads <= base.mean_vector_reads
+    assert es.recall >= base.recall - 0.1
+
+
+def test_nav_graph_beats_random_entry(indexes):
+    ds, idx = indexes
+    nav = idx.search_batch(ds.queries, k=10, l=24, gt=ds.gt)
+    rnd = idx.search_batch(ds.queries, k=10, l=24, gt=ds.gt,
+                           random_entry=True)
+    # ablation "BAMG w/o NG": random entries can't do better on hops
+    assert nav.mean_hops <= rnd.mean_hops + 2
+
+
+def test_ablation_no_bmrng_prune_denser_graph(small_corpus):
+    ds = small_corpus
+    pruned = BAMGIndex.build(ds.base, BAMGParams(r=16, l_build=32, knn_k=16,
+                                                 use_bmrng_prune=True))
+    dense = BAMGIndex.build(ds.base, BAMGParams(r=16, l_build=32, knn_k=16,
+                                                use_bmrng_prune=False))
+    assert (pruned.degree_stats()["total"]
+            <= dense.degree_stats()["total"] + 1e-9)
+    st = dense.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+    assert st.recall > 0.85
+
+
+def test_baselines_recall(small_corpus):
+    ds = small_corpus
+    da = DiskANNIndex.build(ds.base, DiskANNParams(r=16, l_build=32))
+    sl = StarlingIndex.build(ds.base, StarlingParams(r=16, l_build=32))
+    for idx in (da, sl):
+        st = idx.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+        assert st.recall >= 0.9, type(idx).__name__
+    # Starling block-level search reads fewer blocks than DiskANN
+    s_st = sl.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+    d_st = da.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+    assert s_st.mean_nio <= d_st.mean_nio
+
+
+def test_bamg_fewer_graph_reads_than_starling_total(small_corpus):
+    """The structural claim: decoupling multiplies nodes/block, so BAMG
+    needs fewer *graph* I/Os than Starling needs total I/Os."""
+    ds = small_corpus
+    bamg = BAMGIndex.build(ds.base, BAMGParams(r=16, l_build=32, knn_k=16))
+    sl = StarlingIndex.build(ds.base, StarlingParams(r=16, l_build=32))
+    b = bamg.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+    s = sl.search_batch(ds.queries, k=10, l=48, gt=ds.gt)
+    assert b.mean_graph_reads < s.mean_nio
+
+
+def test_save_load_roundtrip(indexes, tmp_path):
+    ds, idx = indexes
+    path = os.path.join(tmp_path, "idx.npz")
+    idx.save(path)
+    idx2 = BAMGIndex.load(path)
+    r1 = idx.search(ds.queries[0], k=5, l=24)
+    r2 = idx2.search(ds.queries[0], k=5, l=24)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    assert r1.nio == r2.nio
+
+
+def test_alpha_controls_intra_block_depth(indexes):
+    ds, idx = indexes
+    a1 = idx.search_batch(ds.queries, k=10, l=32, gt=ds.gt, alpha=1)
+    a4 = idx.search_batch(ds.queries, k=10, l=32, gt=ds.gt, alpha=4)
+    # deeper intra-block exploration never increases graph reads per hop
+    assert a4.mean_graph_reads <= a1.mean_graph_reads + 3

@@ -1,0 +1,118 @@
+"""Storage layouts (paper Fig. 3) + I/O simulator byte accounting."""
+import numpy as np
+import pytest
+
+from repro.core.io_sim import BLOCK_SIZE, BlockDevice, CostModel, IOStats
+from repro.core.storage import (CoupledStorage, DecoupledStorage,
+                                coupled_nodes_per_block, max_capacity_for)
+
+
+def _graph(n, r, seed=0):
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(0, n, (n, r)).astype(np.int32)
+    adj[rng.random((n, r)) < 0.2] = -1
+    return adj
+
+
+def test_block_device_lru_and_counting():
+    dev = BlockDevice(list(range(10)), cache_blocks=2, kind="graph")
+    dev.read(0); dev.read(1)
+    assert dev.stats.graph_reads == 2
+    dev.read(0)                      # hit
+    assert dev.stats.cache_hits == 1
+    dev.read(2)                      # evicts 1
+    dev.read(1)                      # miss again
+    assert dev.stats.graph_reads == 4
+    with pytest.raises(IndexError):
+        dev.read(99)
+
+
+def test_coupled_storage_roundtrip():
+    n, d, r = 50, 16, 8
+    x = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+    adj = _graph(n, r)
+    st = CoupledStorage(x, adj)
+    assert st.npb == BLOCK_SIZE // (4 * d + 4 + 4 * r)
+    for vid in (0, 17, 49):
+        rec = st.read_node_block(vid)
+        s = st.slot_in_block(vid)
+        assert rec.vids[s] == vid
+        np.testing.assert_array_equal(rec.vecs[s], x[vid])
+        np.testing.assert_array_equal(rec.nbrs[s], adj[vid])
+
+
+def test_coupled_large_record_spans_blocks():
+    n, d, r = 10, 1500, 8          # 6 KB record > 4 KB block
+    x = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+    st = CoupledStorage(x, _graph(n, r))
+    assert st.blocks_per_record == 2
+    st.device.reset()
+    st.read_node_block(3)
+    assert st.device.stats.graph_reads == 2   # both span blocks counted
+
+
+def _decoupled(n=60, d=32, r=6, cap=None, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    adj = _graph(n, r, seed)
+    cap = cap or max_capacity_for(r)
+    blocks = (np.arange(n) // cap).astype(np.int32)
+    m = int(blocks.max()) + 1
+    members = -np.ones((m, cap), np.int32)
+    for b in range(m):
+        mem = np.nonzero(blocks == b)[0]
+        members[b, :len(mem)] = mem
+    return x, adj, blocks, members, cap
+
+
+def test_decoupled_graph_block_capacity_respects_block_size():
+    x, adj, blocks, members, cap = _decoupled()
+    st = DecoupledStorage(x, adj, blocks, members)
+    assert cap * st.record_bytes <= BLOCK_SIZE
+    with pytest.raises(ValueError):
+        DecoupledStorage(x, adj, blocks, members, block_size=cap * 4)
+
+
+def test_decoupled_oid_addressing_and_vectors():
+    x, adj, blocks, members, cap = _decoupled()
+    st = DecoupledStorage(x, adj, blocks, members)
+    for vid in (0, 31, 59):
+        oid = int(st.vid2oid[vid])
+        assert int(st.oid2vid[oid]) == vid
+        vec = st.read_vector(oid)
+        np.testing.assert_allclose(vec, x[vid], rtol=1e-6)
+        gb = st.gblock_of_oid(oid)
+        blk = st.read_graph_block(gb)
+        s = oid - gb * cap
+        assert blk.vids[s] == vid
+        nn = adj[vid][adj[vid] >= 0]
+        got = blk.nbrs[s][blk.nbrs[s] >= 0]
+        np.testing.assert_array_equal(np.sort(st.oid2vid[got]), np.sort(nn))
+
+
+def test_vector_alignment_no_straddle():
+    """d=960 (GIST regime): one 3840 B vector per 4 KB block, 1 read each."""
+    x, adj, blocks, members, cap = _decoupled(n=30, d=960, r=6, cap=10)
+    st = DecoupledStorage(x, adj, blocks, members)
+    assert st.vecs_per_vblock == 1
+    st.reset()
+    st.read_vector(int(st.vid2oid[7]))
+    assert st.vector_dev.stats.vector_reads == 1
+    np.testing.assert_allclose(st.read_vector(int(st.vid2oid[7])), x[7],
+                               rtol=1e-6)
+
+
+def test_vector_larger_than_block():
+    x, adj, blocks, members, cap = _decoupled(n=20, d=1100, r=4, cap=8)
+    st = DecoupledStorage(x, adj, blocks, members)
+    assert st.vblocks_per_vec == 2
+    st.reset()
+    v = st.read_vector(int(st.vid2oid[5]))
+    assert st.vector_dev.stats.vector_reads == 2
+    np.testing.assert_allclose(v, x[5], rtol=1e-6)
+
+
+def test_cost_model_monotone():
+    cm = CostModel()
+    assert cm.qps(10, 100, 1000) > cm.qps(20, 100, 1000)
+    assert cm.query_time_us(10, 0, 0) == pytest.approx(10 * cm.read_us)

@@ -1,0 +1,144 @@
+"""Training substrate: optimizer, checkpoint/restart, compression, FT."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lm_batch
+from repro.models.transformer import LMConfig, ShardCtx, init_lm_params, lm_loss
+from repro.train import checkpoint as ckpt
+from repro.train.compression import (compress_bf16, dequantize_int8, ef_init,
+                                     quantize_int8)
+from repro.train.ft import (FTConfig, SimulatedFailure, resume_or_init,
+                            run_loop, run_with_recovery)
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.train.trainer import init_train_state, make_train_step
+
+CFG = LMConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+               d_head=16, d_ff=64, vocab=64, remat="none", loss_chunks=2,
+               dtype="float32")
+CTX = ShardCtx(mesh=None)
+OPT = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=100)
+
+
+def loss_fn(params, batch):
+    return lm_loss(params, CFG, batch["tokens"], batch["labels"], CTX)
+
+
+def batch_fn(step):
+    t, l = lm_batch(step, 4, 8, CFG.vocab, seed=0)
+    return {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+
+
+def fresh_state():
+    return init_train_state(init_lm_params(CFG, jax.random.PRNGKey(0)), OPT)
+
+
+def test_adamw_descends():
+    state = fresh_state()
+    step = make_train_step(loss_fn, OPT, donate=False)
+    losses = []
+    for s in range(30):
+        state, m = step(state, batch_fn(s % 3))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_lr_schedule():
+    assert float(lr_at(OPT, jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(lr_at(OPT, jnp.asarray(5))) == pytest.approx(OPT.lr)
+    assert float(lr_at(OPT, jnp.asarray(100))) == pytest.approx(
+        OPT.lr * OPT.min_lr_frac, rel=1e-3)
+
+
+def test_grad_clip_bounds_update():
+    state = fresh_state()
+    big = jax.tree.map(lambda p: jnp.full(p.shape, 100.0, jnp.float32),
+                       state["params"])
+    _, _, m = adamw_update(OPT, big, state["opt"], state["params"])
+    assert float(m["grad_norm"]) > OPT.clip_norm
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = fresh_state()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, state)
+    assert ckpt.latest_step(d) == 7
+    restored, step = ckpt.restore(d, state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_structure_mismatch_errors(tmp_path):
+    state = fresh_state()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, state)
+    wrong = {"params": state["params"]}
+    with pytest.raises(ValueError):
+        ckpt.restore(d, wrong)
+
+
+def test_restart_equivalence(tmp_path):
+    """Kill at step k, resume: final state identical to uninterrupted."""
+    step = make_train_step(loss_fn, OPT, donate=False)
+    d = str(tmp_path / "ft")
+    ft = FTConfig(ckpt_dir=d, ckpt_every=4, async_save=False)
+    s_a, _ = run_loop(fresh_state(), step, batch_fn, 12, ft)
+    shutil.rmtree(d)
+    s_b, _, attempts = run_with_recovery(fresh_state, step, batch_fn, 12, ft,
+                                         fail_at=7)
+    assert attempts == 1
+    for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "async")
+    saver = ckpt.AsyncCheckpointer(d, keep=2)
+    state = fresh_state()
+    for s in (1, 2, 3):
+        saver.save(s, state)
+    saver.wait()
+    steps = sorted(int(f[5:13]) for f in os.listdir(d)
+                   if f.startswith("ckpt_"))
+    assert steps == [2, 3]  # gc keeps last 2
+
+
+def test_int8_quant_roundtrip_error_bounded():
+    g = np.random.default_rng(0).normal(size=(128,)).astype(np.float32)
+    q, s = quantize_int8(jnp.asarray(g))
+    back = np.asarray(dequantize_int8(q, s))
+    assert np.abs(back - g).max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates_unbiased():
+    """Sum of (dequantized + carried error) equals the true running sum."""
+    from repro.train.compression import ef_compress
+    rng = np.random.default_rng(1)
+    tree = {"w": jnp.zeros((64,), jnp.float32)}
+    err = ef_init(tree)
+    true_sum = np.zeros(64)
+    sent_sum = np.zeros(64)
+    for i in range(20):
+        g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        qs, err = ef_compress(g, err)
+        q, s = qs["w"]
+        sent_sum += np.asarray(dequantize_int8(q, s))
+    resid = np.asarray(err["w"])
+    np.testing.assert_allclose(sent_sum + resid, true_sum, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_resume_or_init_fresh_and_restore(tmp_path):
+    d = str(tmp_path / "roi")
+    ft = FTConfig(ckpt_dir=d)
+    s0 = resume_or_init(fresh_state, ft)
+    assert int(s0["step"]) == 0
+    ckpt.save(d, 9, fresh_state())
+    s1 = resume_or_init(fresh_state, ft)
+    assert ckpt.latest_step(d) == 9
