@@ -1,0 +1,53 @@
+"""Serving throughput: batched fixed-shape engine vs the host query loop.
+
+Rows: host-engine wall-clock qps, then the batched engine's qps at batch
+sizes {1, 8, 64, 256} (same index, same search budget l), plus recall of
+both so the speedup is apples-to-apples.  The acceptance bar for the
+serving layer is batched-qps(B=64) > host-qps.
+"""
+import time
+
+import numpy as np
+
+from . import common
+from repro.core.distances import recall_at_k
+from repro.serve import BatchedANNEngine, EngineConfig
+
+K = 10
+L = 48
+BATCHES = (1, 8, 64, 256)
+
+
+def run() -> None:
+    regime = "sift-like"
+    ds = common.dataset(regime)
+    idx = common.default_bamg(regime)
+
+    t0 = time.perf_counter()
+    st = idx.search_batch(ds.queries, k=K, l=L, gt=ds.gt)
+    host_s = time.perf_counter() - t0
+    host_qps = len(ds.queries) / host_s
+    common.emit("serve.host_loop.qps", round(host_qps, 1),
+                f"recall={st.recall:.3f}")
+
+    eng = BatchedANNEngine.from_index(idx, EngineConfig(l=L, max_hops=32))
+    ids, _ = eng.search_batch(ds.queries, K)
+    common.emit("serve.batched.recall", round(recall_at_k(ids, ds.gt, K), 3),
+                f"l={L}")
+
+    nq = len(ds.queries)
+    for b in BATCHES:
+        q = np.tile(ds.queries, (-(-b // nq), 1))[:b]
+        eng.search_batch(q, K)                       # compile + warm
+        reps = max(1, 256 // b)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            eng.search_batch(q, K)
+        dt = time.perf_counter() - t0
+        qps = b * reps / dt
+        common.emit(f"serve.batched.b{b}.qps", round(qps, 1),
+                    f"speedup_vs_host={qps / host_qps:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

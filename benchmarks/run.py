@@ -18,7 +18,8 @@ def main() -> None:
 
     from . import (bench_ablation, bench_alpha, bench_beta, bench_degrees,
                    bench_indexing, bench_kernels, bench_memory,
-                   bench_nio_recall, bench_qps_recall, bench_roofline)
+                   bench_nio_recall, bench_qps_recall, bench_roofline,
+                   bench_serve)
 
     suites = [
         ("fig4", bench_qps_recall.run),
@@ -31,6 +32,7 @@ def main() -> None:
         ("fig11", bench_ablation.run),
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
+        ("serve", bench_serve.run),
     ]
     only = [s for s in args.only.split(",") if s]
     print("name,value,derived")

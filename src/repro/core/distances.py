@@ -65,3 +65,13 @@ def medoid(x: np.ndarray, sample: int = 4096, seed: int = 0) -> int:
     mean = x.mean(axis=0, keepdims=True)
     d = pairwise_sq_l2(mean, x)[0]
     return int(np.argmin(d))
+
+
+def recall_at_k(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
+    """Mean recall@k of (B, >=k) result ids against (B, >=k) ground truth.
+
+    Padding ids (-1) never appear in ground truth, so they count as misses.
+    """
+    hits = sum(len(set(ids[i, :k].tolist()) & set(gt[i, :k].tolist()))
+               for i in range(len(ids)))
+    return hits / (len(ids) * k)

@@ -5,8 +5,15 @@ systems (DiskANN, Starling-style, BAMG), all on the same I/O simulator.
     res = idx.search(q, k=10, l=64)          # one query
     out = idx.search_batch(queries, k=10, l=64)  # stats aggregated
 
-This is the host (exact-semantics) engine; the TPU-native batched engine is
-`repro.serve.ann_engine` (fixed-shape, shard_map scatter-gather).
+This is the host (exact-semantics) engine: one Python query at a time, every
+block fetch routed through the I/O simulator so NIO/recall match the paper's
+accounting.  The TPU-native batched engine lives in
+`repro.serve.ann_engine.BatchedANNEngine` -- it consumes the fixed-shape
+arrays exported by `BAMGIndex.batch_arrays()` and processes a whole query
+batch per jitted step (no I/O simulation; pure device compute).  The
+scatter-gather front-end over sharded sub-indexes is
+`repro.serve.frontend.ShardedFrontend`.  Search-path knobs (`l`, `max_hops`)
+mean the same thing in both engines.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import numpy as np
 
 from .bamg import BAMGGraph, build_bamg_from
 from .block_assign import bnf_blocks, block_members
+from .distances import recall_at_k
 from .graph_build import build_nsg, build_vamana, degree_stats
 from .io_sim import BLOCK_SIZE, CostModel
 from .navgraph import NavGraph, build_navgraph, search_nav
@@ -60,10 +68,11 @@ def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
     npq = float(np.mean([r.n_pq for r in results]))
     rec = -1.0
     if gt is not None:
-        hits = 0
-        for r, g in zip(results, gt):
-            hits += len(set(r.ids.tolist()) & set(g[:k].tolist()))
-        rec = hits / (len(results) * k)
+        idm = np.full((len(results), k), -1, np.int64)   # short results pad
+        for i, r in enumerate(results):
+            m = min(k, len(r.ids))
+            idm[i, :m] = r.ids[:m]
+        rec = recall_at_k(idm, gt, k)
     return BatchStats(
         recall=rec, mean_nio=nio,
         mean_graph_reads=float(np.mean([r.graph_reads for r in results])),
@@ -284,7 +293,8 @@ class BAMGIndex:
     def search(self, q: np.ndarray, k: int, l: int,
                alpha: Optional[int] = None,
                rerank_margin: Optional[float] = None,
-               random_entry_seed: Optional[int] = None) -> SearchResult:
+               random_entry_seed: Optional[int] = None,
+               max_hops: Optional[int] = None) -> SearchResult:
         table = self.codec.adc_table(q)
         if random_entry_seed is not None:  # ablation "BAMG w/o NG"
             rng = np.random.default_rng(random_entry_seed)
@@ -293,17 +303,44 @@ class BAMGIndex:
             entries = self.entries_for(table)
         return search_bamg(self.store, self.codes, table, q, entries, k, l,
                            alpha=alpha if alpha is not None else self.params.alpha,
-                           rerank_margin=rerank_margin)
+                           rerank_margin=rerank_margin, max_hops=max_hops)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
                      gt: Optional[np.ndarray] = None,
                      alpha: Optional[int] = None,
                      rerank_margin: Optional[float] = None,
-                     random_entry: bool = False) -> BatchStats:
+                     random_entry: bool = False,
+                     max_hops: Optional[int] = None) -> BatchStats:
         res = [self.search(q, k, l, alpha=alpha, rerank_margin=rerank_margin,
-                           random_entry_seed=(i if random_entry else None))
+                           random_entry_seed=(i if random_entry else None),
+                           max_hops=max_hops)
                for i, q in enumerate(queries)]
         return _aggregate(res, gt, k, self.cost)
+
+    def batch_arrays(self, n_entry_cands: int = 256) -> dict:
+        """Fixed-shape numpy views for the batched TPU engine.
+
+        Returns adjacency as padded `(N, R)` neighbor VIDs (-1 pad), the PQ
+        codes/codebooks, the raw vectors, and `entry_cands`: a pool of entry
+        candidate VIDs for query-sensitive entry selection (the finest nav
+        layer when a navigation graph was built, else an evenly strided
+        sample), capped at `n_entry_cands` by even striding so candidates
+        stay spread across the corpus.
+        """
+        if self.nav is not None and self.nav.layers:
+            cands = np.asarray(self.nav.layers[-1].vids, np.int64)
+        else:
+            cands = np.arange(len(self.x), dtype=np.int64)
+        if len(cands) > n_entry_cands:
+            cands = cands[np.linspace(0, len(cands) - 1, n_entry_cands,
+                                      dtype=np.int64)]
+        return {
+            "x": np.asarray(self.x, np.float32),
+            "adj": np.asarray(self.graph.adj, np.int32),
+            "codes": np.asarray(self.codes, np.uint8),
+            "codebooks": np.asarray(self.codec.codebooks, np.float32),
+            "entry_cands": cands,
+        }
 
     def degree_stats(self):
         return degree_stats(self.graph.adj, self.graph.blocks)

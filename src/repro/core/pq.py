@@ -61,11 +61,8 @@ class PQCodec:
 
     def adc_tables(self, qs: np.ndarray) -> np.ndarray:
         """(B,d) -> (B, M, K)."""
-        return np.asarray(
-            jax.vmap(_adc_table, in_axes=(0, None))(
-                jnp.asarray(qs, jnp.float32), jnp.asarray(self.codebooks)
-            )
-        )
+        return np.asarray(adc_tables(jnp.asarray(qs, jnp.float32),
+                                     jnp.asarray(self.codebooks)))
 
     def estimate(self, table: np.ndarray, codes: np.ndarray) -> np.ndarray:
         """ADC: (M,K) table + (n,M) codes -> (n,) estimated squared distances."""
@@ -113,6 +110,14 @@ def _adc_table(q: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
     qs = q.reshape(m, 1, dsub)
     diff = qs - codebooks
     return jnp.sum(diff * diff, axis=-1)  # (M, K)
+
+
+def adc_tables(qs: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Batched ADC tables, jnp in/out: (B, d) x (M, K, dsub) -> (B, M, K).
+
+    The single jnp definition of the table formula -- the host codec and
+    the batched serving engine both route through it."""
+    return jax.vmap(_adc_table, in_axes=(0, None))(qs, codebooks)
 
 
 # -- training ---------------------------------------------------------------

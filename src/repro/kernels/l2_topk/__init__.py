@@ -1,2 +1,2 @@
-from .ops import l2_topk  # noqa: F401
+from .ops import l2_topk, l2_topk_rowwise  # noqa: F401
 from .ref import l2_topk_ref  # noqa: F401

@@ -35,3 +35,23 @@ def l2_topk(queries: jnp.ndarray, base: jnp.ndarray, k: int,
     vals = jnp.where(ids >= n, jnp.inf, vals)
     ids = jnp.where(ids >= n, -1, ids)
     return vals[:b], ids[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def l2_topk_rowwise(queries: jnp.ndarray, bases: jnp.ndarray, k: int,
+                    valid: jnp.ndarray | None = None):
+    """Per-row exact re-rank: each query against its *own* candidate set.
+
+    queries (B, D); bases (B, C, D); valid (B, C) bool or None.
+    Returns (dists (B, k) ascending, idx (B, k)) where idx indexes into C
+    (not a shared corpus -- map back through your candidate id array).
+    Invalid / absent entries get dist=+inf.  Used by the batched serving
+    engine, where every query reranks the raw vectors of its private pool
+    (the shared-base Pallas kernel above cannot express per-row bases).
+    """
+    diff = bases.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)                      # (B, C)
+    if valid is not None:
+        d = jnp.where(valid, d, jnp.inf)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

@@ -11,19 +11,18 @@ jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.utils.sharding import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int | None = None):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     data = data if data is not None else n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))

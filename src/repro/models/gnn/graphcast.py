@@ -57,6 +57,28 @@ def _stack(mlps: list) -> dict:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *mlps)
 
 
+@jax.custom_vjp
+def _residual_barrier(xs):
+    """`optimization_barrier` as an identity with a trivial VJP.
+
+    The raw primitive has no differentiation rule on jax <= 0.4.x, which
+    breaks `jax.grad` through the checkpointed layer scan; the barrier only
+    needs to pin the saved residuals, so its cotangent is the identity.
+    """
+    return jax.lax.optimization_barrier(xs)
+
+
+def _residual_barrier_fwd(xs):
+    return jax.lax.optimization_barrier(xs), None
+
+
+def _residual_barrier_bwd(_, cts):
+    return (cts,)
+
+
+_residual_barrier.defvjp(_residual_barrier_fwd, _residual_barrier_bwd)
+
+
 def forward(params, cfg: GraphCastConfig, batch,
             constrain_fn=None) -> jnp.ndarray:
     """batch: node_feat (N, d_feat), edge_src/dst (E,), edge_feat (E, d_edge).
@@ -86,7 +108,7 @@ def forward(params, cfg: GraphCastConfig, batch,
         # barrier GSPMD substitutes the *replicated* x_rep into the scan's
         # per-layer save stack (measured: 16 x 2.4M x 512 replicated saves,
         # 112 GiB, on ogb_products)
-        x, e = jax.lax.optimization_barrier((x, e))
+        x, e = _residual_barrier((x, e))
         if nc == 1:
             xs, xd = gather_src_dst(x, src, dst)
             e = e + mlp_apply(lp["edge_mlp"], jnp.concatenate([e, xs, xd], -1))

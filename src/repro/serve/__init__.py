@@ -1,0 +1,18 @@
+"""TPU-native batched serving layer for BAMG (fixed-shape, jit-compiled).
+
+Two pieces:
+
+- `ann_engine.BatchedANNEngine` -- whole-batch beam search over one BAMG
+  sub-index: batched ADC entry scoring through the `pq_adc` kernel, a
+  `(B, L)` candidate pool maintained by vectorized insert-sort, fixed-hop
+  beam expansion with masked gathers over the padded adjacency matrix, and
+  exact re-rank through `l2_topk_rowwise`.
+- `frontend.ShardedFrontend` -- scatter-gather over S independent
+  sub-indexes: one batched engine call per shard, one global top-k merge.
+
+Everything is fixed-shape so a (batch, k) signature compiles once and is
+reused for the lifetime of the server; see `ann_engine` for the shape
+contract.
+"""
+from .ann_engine import BatchedANNEngine, EngineConfig  # noqa: F401
+from .frontend import ShardedFrontend  # noqa: F401

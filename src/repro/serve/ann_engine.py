@@ -1,0 +1,208 @@
+"""Fixed-shape batched BAMG search engine (TPU-native, jit-compiled).
+
+The host engine (`repro.core.engine.BAMGIndex`) walks the graph one query
+at a time through Python, which is exact for I/O accounting but serializes
+every per-query overhead.  This engine processes the *whole batch per
+step* with only fixed-shape array ops, so one compilation serves the
+lifetime of the server:
+
+- **ADC tables** `(B, M, K)` are built for the whole batch at once, and
+  entry selection scores them against the entry-candidate codes with the
+  `repro.kernels.pq_adc` kernel (query-sensitive entries, DiskANN++-style:
+  each query starts from its own best candidates, not a global medoid).
+- **Candidate pool** is a pair of `(B, L)` id/dist arrays (plus a `(B, L)`
+  expanded mask), kept sorted ascending by estimated distance.  Inserts are
+  a vectorized insert-sort: concatenate `(B, L + R)`, stable-sort by id to
+  drop duplicates (the incumbent pool entry wins, preserving its expanded
+  flag), then stable-sort by distance and truncate to L.  No Python pool.
+- **Beam expansion** runs a fixed number of iterations (`max_hops`); each
+  iteration pops the best unexpanded candidate of every row, gathers its
+  padded adjacency row `(B, R)`, and ADC-scores the gathered neighbor codes
+  `(B, R, M)` against the per-row tables.  Rows whose pool is exhausted
+  no-op via masking (`-1` neighbors score `+inf` and never enter the pool).
+- **Exact re-rank** gathers the raw vectors of each row's top `rerank` pool
+  entries and merges through `repro.kernels.l2_topk.l2_topk_rowwise`.
+
+Fixed-shape contract: one compilation per distinct `(B, D)` query shape and
+`(k,)`; L, R, max_hops, rerank, and the entry-candidate count are baked at
+engine construction.  Differences vs the host engine: no I/O simulation
+(pure device compute), and beam expansion replaces the intra-block
+alpha-BFS -- both explore the same monotonic graph, so results agree under
+an exhaustive configuration (see tests/test_serve_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pq import adc_tables as _adc_tables
+from repro.kernels.l2_topk.ops import l2_topk_rowwise
+from repro.kernels.pq_adc.ops import pq_adc
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    l: int = 64               # candidate pool capacity per query
+    max_hops: int = 32        # fixed beam-expansion iterations
+    n_entry: int = 4          # entry seeds per query
+    rerank: Optional[int] = None   # pool prefix reranked exactly (None = l)
+    n_entry_cands: int = 256  # entry candidate pool scored by pq_adc
+    backend: str = "auto"     # pq_adc backend: "auto" | "pallas" | "ref"
+
+
+def _adc_gather(tables: jnp.ndarray, cand_codes: jnp.ndarray) -> jnp.ndarray:
+    """Per-row ADC: tables (B, M, K), cand_codes (B, R, M) -> (B, R)."""
+    g = jnp.take_along_axis(tables[:, None], cand_codes[..., None], axis=3)
+    return g[..., 0].sum(-1)
+
+
+def _pool_merge(pool_ids, pool_d, pool_exp, cand_ids, cand_d, l: int):
+    """Vectorized insert-sort of candidates into the sorted (B, L) pool.
+
+    Duplicate ids collapse to the incumbent pool entry (stable sort by id
+    keeps the lower concat index first, and the pool occupies indices
+    0..L-1), so expanded flags survive re-insertion and a node is not
+    re-expanded *while it stays in the pool*.  A node evicted past L loses
+    its flag; if the beam later re-encounters it as a best unexpanded
+    candidate it is re-expanded -- the price of a fixed-shape pool vs the
+    host engine's unbounded `explored` set.  In practice eviction means L
+    closer candidates exist, so re-expansion is rare and costs only a hop,
+    never correctness.  Returns the new (ids, dists, expanded), sorted
+    ascending by dist with invalid entries (+inf, id=-1) at the tail.
+    """
+    sentinel = jnp.iinfo(jnp.int32).max
+    ids = jnp.concatenate([pool_ids, cand_ids.astype(jnp.int32)], axis=1)
+    d = jnp.concatenate([pool_d, cand_d], axis=1)
+    exp = jnp.concatenate(
+        [pool_exp, jnp.zeros(cand_ids.shape, bool)], axis=1)
+    d = jnp.where(ids < 0, jnp.inf, d)
+    key = jnp.where(ids < 0, sentinel, ids)
+    order = jnp.argsort(key, axis=1, stable=True)
+    sid = jnp.take_along_axis(key, order, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    d_s = jnp.take_along_axis(d, order, axis=1)
+    exp_s = jnp.take_along_axis(exp, order, axis=1)
+    dup = jnp.pad(sid[:, 1:] == sid[:, :-1], ((0, 0), (1, 0)))
+    ids_s = jnp.where(dup, -1, ids_s)
+    d_s = jnp.where(dup, jnp.inf, d_s)
+    exp_s = jnp.where(dup, False, exp_s)
+    o2 = jnp.argsort(d_s, axis=1, stable=True)[:, :l]
+    return (jnp.take_along_axis(ids_s, o2, axis=1),
+            jnp.take_along_axis(d_s, o2, axis=1),
+            jnp.take_along_axis(exp_s, o2, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "l", "max_hops", "n_entry",
+                                             "rerank", "backend"))
+def batched_search(x, adj, codes, codebooks, entry_cands, entry_codes,
+                   queries, k: int, l: int, max_hops: int, n_entry: int,
+                   rerank: int, backend: str):
+    """One fixed-shape search step for a whole query batch.
+
+    x (N, D) f32; adj (N, R) int32 VID neighbors, -1 pad; codes (N, M);
+    codebooks (M, K, dsub); entry_cands (E,) int32 VIDs with their codes
+    (E, M); queries (B, D).  Returns (ids (B, k) int32 with -1 pad,
+    dists (B, k) f32 ascending, hops_used (B,) int32).
+    """
+    b = queries.shape[0]
+    queries = queries.astype(jnp.float32)
+    tables = _adc_tables(queries, codebooks)               # (B, M, K)
+
+    # --- query-sensitive entry selection: pq_adc over the candidate pool
+    ed = pq_adc(tables, entry_codes, backend=backend)      # (B, E)
+    seed_neg, seed_idx = jax.lax.top_k(-ed, n_entry)
+    seed_ids = entry_cands[seed_idx].astype(jnp.int32)     # (B, n_entry)
+
+    pool_ids = jnp.full((b, l), -1, jnp.int32)
+    pool_d = jnp.full((b, l), jnp.inf, jnp.float32)
+    pool_exp = jnp.zeros((b, l), bool)
+    pool_ids, pool_d, pool_exp = _pool_merge(
+        pool_ids, pool_d, pool_exp, seed_ids, -seed_neg, l)
+
+    rows = jnp.arange(b)
+    codes_i = codes.astype(jnp.int32)
+
+    def step(state, _):
+        pool_ids, pool_d, pool_exp, hops = state
+        frontier_d = jnp.where(pool_exp | (pool_ids < 0), jnp.inf, pool_d)
+        j = jnp.argmin(frontier_d, axis=1)                 # (B,)
+        has = jnp.isfinite(frontier_d[rows, j])
+        v = jnp.where(has, pool_ids[rows, j], 0)
+        pool_exp = pool_exp.at[rows, j].set(pool_exp[rows, j] | has)
+        nbrs = jnp.where(has[:, None], adj[v], -1)         # (B, R)
+        nd = _adc_gather(tables, codes_i[jnp.clip(nbrs, 0)])
+        nd = jnp.where(nbrs >= 0, nd, jnp.inf)
+        pool_ids, pool_d, pool_exp = _pool_merge(
+            pool_ids, pool_d, pool_exp, nbrs, nd, l)
+        return (pool_ids, pool_d, pool_exp, hops + has), None
+
+    (pool_ids, pool_d, pool_exp, hops), _ = jax.lax.scan(
+        step, (pool_ids, pool_d, pool_exp, jnp.zeros(b, jnp.int32)),
+        None, length=max_hops)
+
+    # --- exact re-rank of each row's pool prefix
+    cand = pool_ids[:, :rerank]                            # (B, C)
+    vecs = x[jnp.clip(cand, 0)]                            # (B, C, D)
+    dists, ridx = l2_topk_rowwise(queries, vecs, k, valid=cand >= 0)
+    ids = jnp.take_along_axis(cand, ridx, axis=1)
+    ids = jnp.where(jnp.isfinite(dists), ids, -1)
+    return ids, dists, hops
+
+
+class BatchedANNEngine:
+    """Batched fixed-shape searcher over one BAMG sub-index.
+
+    Construct via `from_index(BAMGIndex)` (uses `BAMGIndex.batch_arrays()`)
+    or directly from the array dict.  `search_batch` accepts/returns numpy;
+    the device round-trip and compilation cache are keyed on (B, D, k).
+    """
+
+    def __init__(self, arrays: dict, config: EngineConfig = EngineConfig()):
+        self.config = config
+        self.n, self.d = arrays["x"].shape
+        cands = np.asarray(arrays["entry_cands"], np.int64)
+        self.x = jnp.asarray(arrays["x"], jnp.float32)
+        self.adj = jnp.asarray(arrays["adj"], jnp.int32)
+        self.codes = jnp.asarray(arrays["codes"])
+        self.codebooks = jnp.asarray(arrays["codebooks"], jnp.float32)
+        self.entry_cands = jnp.asarray(cands, jnp.int32)
+        self.entry_codes = jnp.asarray(arrays["codes"][cands])
+        l = min(config.l, self.n)
+        self._l = l
+        self._rerank = min(config.rerank if config.rerank is not None else l, l)
+        self._n_entry = min(config.n_entry, len(cands))
+
+    @classmethod
+    def from_index(cls, idx, config: EngineConfig = EngineConfig()):
+        return cls(idx.batch_arrays(n_entry_cands=config.n_entry_cands),
+                   config)
+
+    @property
+    def rerank_capacity(self) -> int:
+        """Largest k this engine can serve (pool prefix reranked exactly)."""
+        return self._rerank
+
+    def search_batch(self, queries: np.ndarray, k: int):
+        """queries (B, D) -> (ids (B, k) int64 with -1 pad, dists (B, k))."""
+        q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
+        if q.shape[1] != self.d:
+            raise ValueError(f"query dim {q.shape[1]} != corpus dim {self.d}")
+        if k > self._rerank:
+            raise ValueError(
+                f"k={k} exceeds the rerank capacity {self._rerank}; raise "
+                f"EngineConfig.l/rerank (fixed at engine construction)")
+        ids, dists, _ = batched_search(
+            self.x, self.adj, self.codes, self.codebooks, self.entry_cands,
+            self.entry_codes, q, k=k, l=self._l,
+            max_hops=self.config.max_hops, n_entry=self._n_entry,
+            rerank=self._rerank, backend=self.config.backend)
+        return np.asarray(ids, np.int64), np.asarray(dists)
+
+    def memory_bytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in (self.x, self.adj, self.codes, self.codebooks))

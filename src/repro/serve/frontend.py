@@ -1,0 +1,103 @@
+"""Sharded scatter-gather serving front-end.
+
+The corpus is partitioned into S sub-corpora; each shard owns an
+independently built BAMG sub-index wrapped in a `BatchedANNEngine`
+(elastic: adding/removing a shard rebuilds only the moved partition).
+A query batch makes ONE batched engine call per shard -- not a Python loop
+over queries -- and the per-shard local top-k are mapped to global ids and
+merged with a single top-k pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import BAMGIndex, BAMGParams
+from .ann_engine import BatchedANNEngine, EngineConfig
+
+
+class ShardedFrontend:
+    """Scatter-gather over S `BatchedANNEngine` sub-indexes.
+
+    `shard_vids[s]` maps shard-local row ids back to global corpus ids.
+    """
+
+    def __init__(self, shard_vids: Sequence[np.ndarray],
+                 engines: Sequence[BatchedANNEngine],
+                 host_indexes: Optional[Sequence[BAMGIndex]] = None):
+        assert len(shard_vids) == len(engines)
+        self.shard_vids = [np.asarray(v, np.int64) for v in shard_vids]
+        self.engines = list(engines)
+        # host BAMGIndex per shard (comparisons / persistence); None when
+        # the frontend was assembled from bare engine arrays
+        self.host_indexes = list(host_indexes) if host_indexes else None
+        # -1 (absent) local ids pass through as global -1 via a sentinel row
+        self._lut = [np.concatenate([v, [-1]]) for v in self.shard_vids]
+
+    @classmethod
+    def build(cls, x: np.ndarray, n_shards: int,
+              params: Optional[BAMGParams] = None,
+              config: EngineConfig = EngineConfig()) -> "ShardedFrontend":
+        """Round-robin partition + per-shard BAMG build."""
+        params = params or BAMGParams()
+        owner = np.arange(len(x)) % n_shards
+        vids, engines, indexes = [], [], []
+        if len(x) < 3 * n_shards:
+            raise ValueError(
+                f"n_shards={n_shards} leaves <3 points per shard for a "
+                f"{len(x)}-point corpus; a graph sub-index needs >=3 points")
+        for s in range(n_shards):
+            ids = np.nonzero(owner == s)[0]
+            ns = len(ids)
+            # small shards: graph-build degree/knn params cannot exceed n-1
+            # (same clamp as navgraph's recursive layer builds)
+            p = dataclasses.replace(
+                params, seed=s, r=min(params.r, ns - 1),
+                knn_k=min(params.knn_k, ns - 1),
+                l_build=min(params.l_build, max(4, ns)))
+            idx = BAMGIndex.build(x[ids], p)
+            vids.append(ids)
+            indexes.append(idx)
+            engines.append(BatchedANNEngine.from_index(idx, config))
+        return cls(vids, engines, host_indexes=indexes)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.engines)
+
+    def search_batch(self, queries: np.ndarray, k: int):
+        """(B, D) queries -> global (ids (B, k) int64, dists (B, k)).
+
+        Scatter: one batched call per shard.  Gather: map local->global ids
+        and merge the (B, S*k) candidates with a single top-k.
+        """
+        queries = np.atleast_2d(queries)
+        all_ids, all_d = [], []
+        for lut, eng in zip(self._lut, self.engines):
+            # a shard smaller than k contributes what it has, padded --
+            # the global merge still sees plenty from the other shards
+            ks = min(k, eng.rerank_capacity)
+            ids_s, d_s = eng.search_batch(queries, ks)     # (B, ks) local
+            if ks < k:
+                b = len(ids_s)
+                ids_s = np.concatenate(
+                    [ids_s, np.full((b, k - ks), -1, ids_s.dtype)], axis=1)
+                d_s = np.concatenate(
+                    [d_s, np.full((b, k - ks), np.inf, d_s.dtype)], axis=1)
+            all_ids.append(lut[ids_s])                     # -1 -> global -1
+            all_d.append(d_s)
+        ids = np.concatenate(all_ids, axis=1)              # (B, S*k)
+        d = np.concatenate(all_d, axis=1)
+        gd, gi = _merge_topk(d, k)
+        gids = np.take_along_axis(ids, gi, axis=1)
+        return np.where(np.isfinite(gd), gids, -1), gd
+
+
+def _merge_topk(dists: np.ndarray, k: int):
+    """Host-side (B, S*k) -> ascending (B, k); tiny, so plain numpy."""
+    part = np.argpartition(dists, k - 1, axis=1)[:, :k]
+    pd = np.take_along_axis(dists, part, axis=1)
+    o = np.argsort(pd, axis=1, kind="stable")
+    return np.take_along_axis(pd, o, axis=1), np.take_along_axis(part, o, axis=1)

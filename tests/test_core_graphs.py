@@ -1,6 +1,9 @@
 """Graph-construction properties: RNG/MRNG/BMRNG (paper §2-3)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.block_assign import (block_members, bnf_blocks, random_blocks,

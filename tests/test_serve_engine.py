@@ -1,0 +1,106 @@
+"""Batched serving engine vs the host BAMG engine (parity + shapes).
+
+The batched engine explores the same monotonic graph with the same PQ
+estimates; under an exhaustive configuration (pool holds the whole corpus,
+hop budget covers it, full exact re-rank) it must return the *identical*
+top-k ids as brute force -- and so must `BAMGIndex.search` with l=n.  At
+practical settings the two engines only need to agree on recall within a
+small tolerance.
+"""
+import numpy as np
+import pytest
+
+from repro.core.distances import exact_knn, recall_at_k
+from repro.core.engine import BAMGIndex, BAMGParams
+from repro.serve import BatchedANNEngine, EngineConfig, ShardedFrontend
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def built(small_corpus):
+    idx = BAMGIndex.build(small_corpus.base,
+                          BAMGParams(alpha=3, beta=1.05, r=16, l_build=32,
+                                     knn_k=16, seed=0))
+    return small_corpus, idx
+
+
+def test_exhaustive_rerank_identical_topk(built):
+    """l = n, hops = n, full re-rank: batched ids == host ids == brute force."""
+    ds, idx = built
+    n = len(ds.base)
+    eng = BatchedANNEngine.from_index(idx, EngineConfig(l=n, max_hops=n))
+    ids, dists = eng.search_batch(ds.queries, K)
+    gd, gi = exact_knn(ds.base, ds.queries, K)
+    np.testing.assert_array_equal(ids, gi)
+    np.testing.assert_allclose(dists, gd, rtol=1e-4, atol=1e-3)
+    for qi, q in enumerate(ds.queries):
+        r = idx.search(q, k=K, l=n)
+        np.testing.assert_array_equal(ids[qi], r.ids)
+
+
+def test_practical_settings_recall_parity(built):
+    ds, idx = built
+    eng = BatchedANNEngine.from_index(idx, EngineConfig(l=48, max_hops=32))
+    ids, dists = eng.search_batch(ds.queries, K)
+    assert ids.shape == (len(ds.queries), K)
+    assert (np.diff(dists, axis=1) >= 0).all()        # ascending
+    host = idx.search_batch(ds.queries, k=K, l=48, gt=ds.gt)
+    assert recall_at_k(ids, ds.gt, K) >= host.recall - 0.05
+
+
+def test_single_query_batch(built):
+    ds, idx = built
+    eng = BatchedANNEngine.from_index(idx, EngineConfig(l=32, max_hops=24))
+    ids, dists = eng.search_batch(ds.queries[0], K)   # 1-D query promoted
+    assert ids.shape == (1, K)
+    assert np.isfinite(dists).all() and (ids >= 0).all()
+
+
+def test_pool_capacity_exceeding_corpus_is_clamped(built):
+    ds, idx = built
+    n = len(ds.base)
+    eng = BatchedANNEngine.from_index(idx, EngineConfig(l=10 * n, max_hops=8))
+    ids, _ = eng.search_batch(ds.queries[:2], K)
+    assert ids.shape == (2, K)
+
+
+def test_max_hops_plumbed_through_host_engine(built):
+    """BAMGIndex.search(max_hops=...) bounds the walk (satellite check)."""
+    ds, idx = built
+    r1 = idx.search(ds.queries[0], k=K, l=48, max_hops=1)
+    rfull = idx.search(ds.queries[0], k=K, l=48)
+    assert r1.hops == 1
+    assert rfull.hops >= r1.hops
+
+
+def test_frontend_shard_smaller_than_k(built):
+    """A shard with fewer points than k contributes what it has; the global
+    merge still returns k valid ids from the other shards."""
+    ds, _ = built
+    n = len(ds.base)
+    # 8 shards of a 75-point prefix -> ~9 points per shard, k=10 > shard size
+    small = ds.base[:75]
+    fe = ShardedFrontend.build(
+        small, n_shards=8,
+        params=BAMGParams(alpha=3, beta=1.05, r=8, l_build=16, knn_k=8),
+        config=EngineConfig(l=75, max_hops=75))
+    ids, dists = fe.search_batch(ds.queries, K)
+    assert ids.shape == (len(ds.queries), K)
+    assert (ids >= 0).all() and np.isfinite(dists).all()
+    _, gi = exact_knn(small, ds.queries, K)
+    np.testing.assert_array_equal(ids, gi)
+
+
+def test_sharded_frontend_matches_global_brute_force(built):
+    """2-shard scatter-gather at exhaustive budget == global brute force."""
+    ds, _ = built
+    n = len(ds.base)
+    fe = ShardedFrontend.build(
+        ds.base, n_shards=2,
+        params=BAMGParams(alpha=3, beta=1.05, r=16, l_build=32, knn_k=16),
+        config=EngineConfig(l=n, max_hops=n))
+    ids, dists = fe.search_batch(ds.queries, K)
+    _, gi = exact_knn(ds.base, ds.queries, K)
+    np.testing.assert_array_equal(ids, gi)
+    assert (np.diff(dists, axis=1) >= 0).all()
