@@ -1,0 +1,93 @@
+"""Block-cache policy x capacity x queue-depth sweep over the pipelined
+I/O scheduler, for all three systems (beyond-paper; ROADMAP "fast as the
+hardware allows").
+
+Emits, per the PR's acceptance criteria, for BAMG on the synthetic corpus:
+  (a) `parity_nio_delta` -- batched-submission vs serial read path must
+      report *identical* NIO (the scheduler changes timing, never
+      accounting); the row's value is the absolute delta (must be 0).
+  (b) `qd{q}.service_us` -- mean pipelined service time per query; QD>=4
+      must beat QD=1.
+  (c) `pinned.graph_reads` vs `lru.graph_reads` at equal cache capacity --
+      pinning the hot navigation-entry blocks must strictly reduce graph
+      reads.
+Plus a policy x cache-size sweep (NIO + hit rate) for bamg / starling /
+diskann, and a `warm` row for the cross-query warm-cache serving mode.
+"""
+from . import common
+
+POLICIES = ("lru", "fifo", "clock", "2q")
+CACHE_SIZES = (16, 64, 256)
+QDS = (1, 4, 16)
+K, L = 10, 48
+
+
+def run(regime: str = "sift-like") -> None:
+    ds = common.dataset(regime)
+    q = ds.queries
+
+    # --- (a) batched submission vs serial: identical accounting ----------
+    bamg = common.bamg_index(regime)
+    serial = bamg.search_batch(q, k=K, l=L, gt=ds.gt, batch_io=False)
+    bamg.configure_io(qd=8, batch_io=True)
+    batched = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+    delta = abs(batched.mean_nio - serial.mean_nio)
+    common.emit(f"io_pipeline.{regime}.bamg.parity_nio_delta", delta,
+                f"serial={serial.mean_nio:.2f};batched={batched.mean_nio:.2f};"
+                f"recall_delta={abs(batched.recall - serial.recall):.4f}")
+    assert delta == 0.0, "batched submission changed NIO accounting"
+
+    # --- (b) queue-depth sweep (batched submissions) ----------------------
+    svc = {}
+    for qd in QDS:
+        bamg.configure_io(qd=qd, batch_io=True)
+        st = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+        svc[qd] = st.mean_service_us
+        common.emit(f"io_pipeline.{regime}.bamg.qd{qd}.service_us",
+                    round(st.mean_service_us, 1),
+                    f"serial_us={st.mean_serial_us:.1f};nio={st.mean_nio:.2f};"
+                    f"qps_pipelined={st.qps_pipelined:.0f}")
+    common.emit(f"io_pipeline.{regime}.bamg.qd_speedup_4v1",
+                round(svc[1] / max(svc[4], 1e-9), 2),
+                f"qd1={svc[1]:.1f}us;qd4={svc[4]:.1f}us")
+    assert svc[4] < svc[1], "QD=4 must beat QD=1 on service time"
+
+    # --- (c) pinned nav blocks vs plain LRU at equal capacity -------------
+    cap = 64
+    bamg.configure_io(cache_policy="lru", cache_blocks=cap, qd=1,
+                      batch_io=False, pin_nav_blocks=0)
+    unpinned = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+    bamg.configure_io(pin_nav_blocks=cap // 2)
+    pinned = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+    common.emit(f"io_pipeline.{regime}.bamg.pinned.graph_reads",
+                round(pinned.mean_graph_reads, 2),
+                f"unpinned_lru={unpinned.mean_graph_reads:.2f};cap={cap};"
+                f"pins={cap // 2};hit_rate={pinned.cache_hit_rate:.3f}")
+    assert pinned.mean_graph_reads < unpinned.mean_graph_reads, \
+        "pinning nav blocks must strictly reduce graph reads"
+    bamg.configure_io(pin_nav_blocks=0, cache_blocks=256)
+
+    # --- policy x cache-size sweep, all three systems ---------------------
+    systems = (("bamg", bamg), ("starling", common.starling_index(regime)),
+               ("diskann", common.diskann_index(regime)))
+    for name, idx in systems:
+        for pol in POLICIES:
+            for cap in CACHE_SIZES:
+                idx.configure_io(cache_policy=pol, cache_blocks=cap, qd=1,
+                                 batch_io=False)
+                st = idx.search_batch(q, k=K, l=L, gt=ds.gt)
+                common.emit(
+                    f"io_pipeline.{regime}.{name}.{pol}.c{cap}.nio",
+                    round(st.mean_nio, 2),
+                    f"recall={st.recall:.3f};hit_rate={st.cache_hit_rate:.3f}")
+        # cross-query warm cache (serving mode), default policy/capacity
+        idx.configure_io(cache_policy="lru", cache_blocks=256)
+        warm = idx.search_batch(q, k=K, l=L, gt=ds.gt, warm_cache=True)
+        common.emit(f"io_pipeline.{regime}.{name}.warm.nio",
+                    round(warm.mean_nio, 2),
+                    f"recall={warm.recall:.3f};"
+                    f"hit_rate={warm.cache_hit_rate:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -17,9 +17,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_ablation, bench_alpha, bench_beta, bench_degrees,
-                   bench_indexing, bench_kernels, bench_memory,
-                   bench_nio_recall, bench_qps_recall, bench_roofline,
-                   bench_serve)
+                   bench_indexing, bench_io_pipeline, bench_kernels,
+                   bench_memory, bench_nio_recall, bench_qps_recall,
+                   bench_roofline, bench_serve)
 
     suites = [
         ("fig4", bench_qps_recall.run),
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig10", bench_memory.run),
         ("table2", bench_degrees.run),
         ("fig11", bench_ablation.run),
+        ("io_pipeline", bench_io_pipeline.run),
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
         ("serve", bench_serve.run),

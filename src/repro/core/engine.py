@@ -7,7 +7,27 @@ systems (DiskANN, Starling-style, BAMG), all on the same I/O simulator.
 
 This is the host (exact-semantics) engine: one Python query at a time, every
 block fetch routed through the I/O simulator so NIO/recall match the paper's
-accounting.  The TPU-native batched engine lives in
+accounting.
+
+I/O knobs (all three systems; see `repro.core.io_sim` for the two metric
+domains):
+
+* ``cache_policy`` ('lru' | 'fifo' | 'clock' | '2q') and ``cache_blocks``
+  select the block-cache replacement policy and capacity; BAMG additionally
+  has ``vec_cache_blocks`` for the decoupled vector region and
+  ``pin_nav_blocks`` -- a budget of hot navigation-entry graph blocks pinned
+  in memory forever (Starling-style; pins count against ``cache_blocks``).
+* ``qd`` is the io_uring-style queue depth of the pipelined `IOScheduler`;
+  ``batch_io=True`` makes search issue batched submissions (per-hop frontier
+  prefetch + one-shot re-rank reads).  Accounting (NIO, recall, cache hits)
+  is bit-identical to the serial path -- only `BatchStats.mean_service_us`
+  (pipelined) vs `mean_serial_us` (sequential) and the derived
+  `qps_pipelined` change.
+* ``search_batch(..., warm_cache=True)`` keeps the block cache warm across
+  the queries of a batch (cross-query serving mode); the default cold cache
+  per query matches the paper's NIO accounting.
+
+The TPU-native batched engine lives in
 `repro.serve.ann_engine.BatchedANNEngine` -- it consumes the fixed-shape
 arrays exported by `BAMGIndex.batch_arrays()` and processes a whole query
 batch per jitted step (no I/O simulation; pure device compute).  The
@@ -28,11 +48,42 @@ from .block_assign import bnf_blocks, block_members
 from .distances import recall_at_k
 from .graph_build import build_nsg, build_vamana, degree_stats
 from .io_sim import BLOCK_SIZE, CostModel
-from .navgraph import NavGraph, build_navgraph, search_nav
+from .navgraph import (NavGraph, build_navgraph, nav_pin_gblocks, search_nav)
 from .pq import PQCodec, train_pq
 from .search import SearchResult, search_bamg, search_coupled
 from .storage import (CoupledStorage, DecoupledStorage, coupled_nodes_per_block,
                       max_capacity_for)
+
+
+def _batch(search_one, queries, gt, k: int, cost: CostModel,
+           warm_cache: bool) -> BatchStats:
+    """Shared batch loop: `search_one(i, q, drop_cache)` per query; a warm
+    cache drops only before the first query (cross-query serving mode)."""
+    res = [search_one(i, q, (not warm_cache) or i == 0)
+           for i, q in enumerate(queries)]
+    return _aggregate(res, gt, k, cost)
+
+
+def _update_io_params(p, updates: dict) -> None:
+    """None-means-unchanged in-place update of an index's params."""
+    for name, val in updates.items():
+        if val is not None:
+            setattr(p, name, val)
+
+
+def _configure_coupled_io(idx, cache_policy, cache_blocks, qd, batch_io):
+    """Rebuild only the coupled storage/scheduler with new I/O knobs (the
+    graph, PQ codes, and layout are untouched) -- cheap sweeps."""
+    _update_io_params(idx.params, dict(
+        cache_policy=cache_policy, cache_blocks=cache_blocks, qd=qd,
+        batch_io=batch_io))
+    p = idx.params
+    idx.store = CoupledStorage(idx.x, idx.adj, order=idx.store.layout,
+                               policy=p.cache_policy,
+                               cache_blocks=p.cache_blocks,
+                               cost=CostModel(qd=p.qd))
+    idx.cost = idx.store.scheduler.cost
+    return idx
 
 
 def _pick_pq_m(d: int, target: int | None = None) -> int:
@@ -59,6 +110,10 @@ class BatchStats:
     mean_n_dist: float
     mean_n_pq: float
     qps: float
+    mean_service_us: float = 0.0   # pipelined I/O wall-clock (qd-overlapped)
+    mean_serial_us: float = 0.0    # same demand misses, strictly serial
+    cache_hit_rate: float = 0.0    # hits / (hits + NIO) over the batch
+    qps_pipelined: float = 0.0     # QPS with the pipelined service time
 
 
 def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
@@ -73,12 +128,19 @@ def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
             m = min(k, len(r.ids))
             idm[i, :m] = r.ids[:m]
         rec = recall_at_k(idm, gt, k)
+    service = float(np.mean([r.service_us for r in results]))
+    hits = float(np.sum([r.cache_hits for r in results]))
+    total_nio = float(np.sum([r.nio for r in results]))
     return BatchStats(
         recall=rec, mean_nio=nio,
         mean_graph_reads=float(np.mean([r.graph_reads for r in results])),
         mean_vector_reads=float(np.mean([r.vector_reads for r in results])),
         mean_hops=float(np.mean([r.hops for r in results])),
-        mean_n_dist=nd, mean_n_pq=npq, qps=cost.qps(nio, nd, npq))
+        mean_n_dist=nd, mean_n_pq=npq, qps=cost.qps(nio, nd, npq),
+        mean_service_us=service,
+        mean_serial_us=float(np.mean([r.serial_us for r in results])),
+        cache_hit_rate=hits / (hits + total_nio) if hits + total_nio else 0.0,
+        qps_pipelined=cost.qps_from_io_us(service, nd, npq))
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +152,10 @@ class DiskANNParams:
     l_build: int = 64
     alpha: float = 1.2
     pq_m: Optional[int] = None
+    cache_policy: str = "lru"        # block-cache replacement policy
+    cache_blocks: int = 256          # block-cache capacity
+    qd: int = 1                      # I/O queue depth (pipelined scheduler)
+    batch_io: bool = False           # batched submissions + prefetch
     seed: int = 0
 
 
@@ -98,30 +164,46 @@ class DiskANNIndex:
 
     kind = "diskann"
 
-    def __init__(self, x, adj, entry, codec, codes, store):
+    def __init__(self, x, adj, entry, codec, codes, store, params=None):
         self.x, self.adj, self.entry = x, adj, entry
         self.codec, self.codes, self.store = codec, codes, store
-        self.cost = CostModel()
+        self.params = params if params is not None else DiskANNParams()
+        self.cost = store.scheduler.cost
 
     @classmethod
     def build(cls, x: np.ndarray, params: DiskANNParams = DiskANNParams()):
+        params = dataclasses.replace(params)   # configure_io mutates in place
         adj, entry = build_vamana(x, r=params.r, l_build=params.l_build,
                                   alpha=params.alpha, seed=params.seed)
         m = params.pq_m or _pick_pq_m(x.shape[1])
         codec = train_pq(x, m=m, seed=params.seed)
         codes = codec.encode(x)
-        store = CoupledStorage(x, adj)
-        return cls(x, adj, entry, codec, codes, store)
+        store = CoupledStorage(x, adj, policy=params.cache_policy,
+                               cache_blocks=params.cache_blocks,
+                               cost=CostModel(qd=params.qd))
+        return cls(x, adj, entry, codec, codes, store, params)
 
-    def search(self, q: np.ndarray, k: int, l: int) -> SearchResult:
+    def configure_io(self, cache_policy: Optional[str] = None,
+                     cache_blocks: Optional[int] = None,
+                     qd: Optional[int] = None,
+                     batch_io: Optional[bool] = None) -> "DiskANNIndex":
+        """Rebuild only the storage/scheduler with new I/O knobs."""
+        return _configure_coupled_io(self, cache_policy, cache_blocks, qd,
+                                     batch_io)
+
+    def search(self, q: np.ndarray, k: int, l: int,
+               drop_cache: bool = True) -> SearchResult:
         table = self.codec.adc_table(q)
+        bs = max(2, self.params.qd) if self.params.batch_io else None
         return search_coupled(self.store, self.codes, table, q, self.entry,
-                              k, l, block_level=False)
+                              k, l, block_level=False, batch_submit=bs,
+                              drop_cache=drop_cache)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
-                     gt: Optional[np.ndarray] = None) -> BatchStats:
-        res = [self.search(q, k, l) for q in queries]
-        return _aggregate(res, gt, k, self.cost)
+                     gt: Optional[np.ndarray] = None,
+                     warm_cache: bool = False) -> BatchStats:
+        return _batch(lambda i, q, dc: self.search(q, k, l, drop_cache=dc),
+                      queries, gt, k, self.cost, warm_cache)
 
     def degree_stats(self):
         blocks = (self.store.pos // self.store.npb).astype(np.int64)
@@ -141,6 +223,10 @@ class StarlingParams:
     alpha: float = 1.2
     pq_m: Optional[int] = None
     nav_sample: float = 0.05     # random in-memory nav sample fraction
+    cache_policy: str = "lru"
+    cache_blocks: int = 256
+    qd: int = 1
+    batch_io: bool = False
     seed: int = 0
 
 
@@ -150,14 +236,17 @@ class StarlingIndex:
 
     kind = "starling"
 
-    def __init__(self, x, adj, entry, codec, codes, store, nav_vids, nav_adj):
+    def __init__(self, x, adj, entry, codec, codes, store, nav_vids, nav_adj,
+                 params=None):
         self.x, self.adj, self.entry = x, adj, entry
         self.codec, self.codes, self.store = codec, codes, store
         self.nav_vids, self.nav_adj = nav_vids, nav_adj
-        self.cost = CostModel()
+        self.params = params if params is not None else StarlingParams()
+        self.cost = store.scheduler.cost
 
     @classmethod
     def build(cls, x: np.ndarray, params: StarlingParams = StarlingParams()):
+        params = dataclasses.replace(params)   # configure_io mutates in place
         adj, entry = build_vamana(x, r=params.r, l_build=params.l_build,
                                   alpha=params.alpha, seed=params.seed)
         npb = coupled_nodes_per_block(x.shape[1], params.r)
@@ -166,7 +255,10 @@ class StarlingIndex:
         m = params.pq_m or _pick_pq_m(x.shape[1])
         codec = train_pq(x, m=m, seed=params.seed)
         codes = codec.encode(x)
-        store = CoupledStorage(x, adj, order=order)
+        store = CoupledStorage(x, adj, order=order,
+                               policy=params.cache_policy,
+                               cache_blocks=params.cache_blocks,
+                               cost=CostModel(qd=params.qd))
         # Starling nav graph: random sample + Vamana over the sample
         rng = np.random.default_rng(params.seed)
         ns = max(16, int(len(x) * params.nav_sample))
@@ -176,7 +268,16 @@ class StarlingIndex:
                                       l_build=32, alpha=1.2, seed=params.seed)
         else:
             nav_adj = -np.ones((len(nav_vids), 1), np.int32)
-        return cls(x, adj, entry, codec, codes, store, nav_vids, nav_adj)
+        return cls(x, adj, entry, codec, codes, store, nav_vids, nav_adj,
+                   params)
+
+    def configure_io(self, cache_policy: Optional[str] = None,
+                     cache_blocks: Optional[int] = None,
+                     qd: Optional[int] = None,
+                     batch_io: Optional[bool] = None) -> "StarlingIndex":
+        """Rebuild only the storage/scheduler with new I/O knobs."""
+        return _configure_coupled_io(self, cache_policy, cache_blocks, qd,
+                                     batch_io)
 
     def _nav_entries(self, table: np.ndarray, n_entry: int = 4) -> list[int]:
         # greedy over the sampled nav graph using PQ distances
@@ -190,16 +291,20 @@ class StarlingIndex:
         ids, _ = _greedy_layer(layer, [0], pq_dist, ef=16)
         return [int(self.nav_vids[i]) for i in ids[:n_entry]] or [self.entry]
 
-    def search(self, q: np.ndarray, k: int, l: int) -> SearchResult:
+    def search(self, q: np.ndarray, k: int, l: int,
+               drop_cache: bool = True) -> SearchResult:
         table = self.codec.adc_table(q)
         entries = self._nav_entries(table)
+        bs = max(2, self.params.qd) if self.params.batch_io else None
         return search_coupled(self.store, self.codes, table, q, entries,
-                              k, l, block_level=True)
+                              k, l, block_level=True, batch_submit=bs,
+                              drop_cache=drop_cache)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
-                     gt: Optional[np.ndarray] = None) -> BatchStats:
-        res = [self.search(q, k, l) for q in queries]
-        return _aggregate(res, gt, k, self.cost)
+                     gt: Optional[np.ndarray] = None,
+                     warm_cache: bool = False) -> BatchStats:
+        return _batch(lambda i, q, dc: self.search(q, k, l, drop_cache=dc),
+                      queries, gt, k, self.cost, warm_cache)
 
     def degree_stats(self):
         blocks = (self.store.pos // self.store.npb).astype(np.int64)
@@ -219,6 +324,20 @@ class StarlingIndex:
 # ---------------------------------------------------------------------------
 # BAMG
 # ---------------------------------------------------------------------------
+def _make_decoupled_store(x, graph, nav, p) -> DecoupledStorage:
+    """Decoupled storage from a built graph + the I/O knobs in params."""
+    pins = ()
+    if p.pin_nav_blocks > 0:
+        budget = min(p.pin_nav_blocks, max(0, p.cache_blocks))
+        pins = nav_pin_gblocks(nav, graph.blocks, budget, entry=graph.entry)
+    return DecoupledStorage(
+        x, graph.adj, graph.blocks, graph.members,
+        cache_blocks=p.cache_blocks, vec_cache_blocks=p.vec_cache_blocks,
+        policy=p.cache_policy,
+        vec_policy=p.vec_cache_policy, pinned_gblocks=pins,
+        cost=CostModel(qd=p.qd))
+
+
 @dataclasses.dataclass
 class BAMGParams:
     alpha: int = 3
@@ -232,6 +351,13 @@ class BAMGParams:
     use_nav: bool = True
     use_bmrng_prune: bool = True     # ablation: BAMG w/o BMRNG rule
     sibling_edges: bool = True
+    cache_policy: str = "lru"        # graph block cache policy
+    vec_cache_policy: Optional[str] = None   # default: same as cache_policy
+    cache_blocks: int = 256          # graph block cache capacity
+    vec_cache_blocks: int = 256      # vector block cache capacity
+    qd: int = 1                      # I/O queue depth (pipelined scheduler)
+    batch_io: bool = False           # batched submissions (top-alpha + rerank)
+    pin_nav_blocks: int = 0          # nav-entry graph blocks pinned in memory
     seed: int = 0
 
 
@@ -246,11 +372,11 @@ class BAMGIndex:
         self.codec, self.codes, self.store = codec, codes, store
         self.nav = nav
         self.params = params
-        self.cost = CostModel()
+        self.cost = store.scheduler.cost
 
     @classmethod
     def build(cls, x: np.ndarray, params: BAMGParams = BAMGParams()):
-        p = params
+        p = dataclasses.replace(params)        # configure_io mutates in place
         nsg_adj, entry = build_nsg(x, r=p.r, l_build=p.l_build, knn_k=p.knn_k,
                                    seed=p.seed)
         capacity = p.capacity or max_capacity_for(p.r)
@@ -268,12 +394,30 @@ class BAMGIndex:
         m = p.pq_m or _pick_pq_m(x.shape[1])
         codec = train_pq(x, m=m, seed=p.seed)
         codes = codec.encode(x)
-        store = DecoupledStorage(x, graph.adj, graph.blocks, graph.members)
         nav = None
         if p.use_nav:
             nav = build_navgraph(x, graph, alpha=p.alpha, beta=p.beta,
                                  gamma=p.gamma, capacity=capacity, seed=p.seed)
+        store = _make_decoupled_store(x, graph, nav, p)
         return cls(x, graph, codec, codes, store, nav, p)
+
+    def configure_io(self, cache_policy: Optional[str] = None,
+                     vec_cache_policy: Optional[str] = None,
+                     cache_blocks: Optional[int] = None,
+                     vec_cache_blocks: Optional[int] = None,
+                     qd: Optional[int] = None,
+                     batch_io: Optional[bool] = None,
+                     pin_nav_blocks: Optional[int] = None) -> "BAMGIndex":
+        """Rebuild only the storage/scheduler with new I/O knobs (graph, PQ
+        codes, and nav graph untouched) -- cheap policy/QD/pinning sweeps."""
+        _update_io_params(self.params, dict(
+            cache_policy=cache_policy, vec_cache_policy=vec_cache_policy,
+            cache_blocks=cache_blocks, vec_cache_blocks=vec_cache_blocks,
+            qd=qd, batch_io=batch_io, pin_nav_blocks=pin_nav_blocks))
+        self.store = _make_decoupled_store(self.x, self.graph, self.nav,
+                                           self.params)
+        self.cost = self.store.scheduler.cost
+        return self
 
     def _pq_dist_fn(self, table: np.ndarray):
         m_sub = table.shape[0]
@@ -294,28 +438,39 @@ class BAMGIndex:
                alpha: Optional[int] = None,
                rerank_margin: Optional[float] = None,
                random_entry_seed: Optional[int] = None,
-               max_hops: Optional[int] = None) -> SearchResult:
+               max_hops: Optional[int] = None,
+               batch_io: Optional[bool] = None,
+               drop_cache: bool = True) -> SearchResult:
         table = self.codec.adc_table(q)
         if random_entry_seed is not None:  # ablation "BAMG w/o NG"
             rng = np.random.default_rng(random_entry_seed)
             entries = rng.choice(len(self.x), size=4, replace=False).tolist()
         else:
             entries = self.entries_for(table)
+        a = alpha if alpha is not None else self.params.alpha
+        batched = self.params.batch_io if batch_io is None else batch_io
+        # batched mode: each pop submits the top-alpha unchecked candidates'
+        # graph blocks together (demand + speculative prefetch)
+        bs = max(2, a) if batched else None
         return search_bamg(self.store, self.codes, table, q, entries, k, l,
-                           alpha=alpha if alpha is not None else self.params.alpha,
-                           rerank_margin=rerank_margin, max_hops=max_hops)
+                           alpha=a, rerank_margin=rerank_margin,
+                           max_hops=max_hops, batch_submit=bs,
+                           drop_cache=drop_cache)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
                      gt: Optional[np.ndarray] = None,
                      alpha: Optional[int] = None,
                      rerank_margin: Optional[float] = None,
                      random_entry: bool = False,
-                     max_hops: Optional[int] = None) -> BatchStats:
-        res = [self.search(q, k, l, alpha=alpha, rerank_margin=rerank_margin,
-                           random_entry_seed=(i if random_entry else None),
-                           max_hops=max_hops)
-               for i, q in enumerate(queries)]
-        return _aggregate(res, gt, k, self.cost)
+                     max_hops: Optional[int] = None,
+                     batch_io: Optional[bool] = None,
+                     warm_cache: bool = False) -> BatchStats:
+        return _batch(
+            lambda i, q, dc: self.search(
+                q, k, l, alpha=alpha, rerank_margin=rerank_margin,
+                random_entry_seed=(i if random_entry else None),
+                max_hops=max_hops, batch_io=batch_io, drop_cache=dc),
+            queries, gt, k, self.cost, warm_cache)
 
     def batch_arrays(self, n_entry_cands: int = 256) -> dict:
         """Fixed-shape numpy views for the batched TPU engine.
@@ -387,6 +542,6 @@ class BAMGIndex:
                       for i in range(int(z["n_nav"]))]
         params = BAMGParams(alpha=graph.alpha, beta=graph.beta,
                             capacity=graph.capacity)
-        store = DecoupledStorage(x, graph.adj, graph.blocks, graph.members)
         nav = NavGraph(layers=layers) if layers else None
+        store = _make_decoupled_store(x, graph, nav, params)
         return cls(x, graph, codec, codes, store, nav, params)

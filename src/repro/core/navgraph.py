@@ -131,6 +131,32 @@ def build_navgraph(
     return NavGraph(layers=layers)
 
 
+def nav_pin_gblocks(nav: NavGraph | None, blocks: np.ndarray, budget: int,
+                    entry: int | None = None) -> np.ndarray:
+    """Disk graph blocks worth pinning in memory (Starling-style).
+
+    Every disk search enters through the finest navigation layer's nodes, so
+    their graph blocks are the hottest in the whole index: with a per-query
+    cold cache each would cost one NIO at the start of every query.  Rank
+    blocks by how many finest-layer vids they host and return the top
+    `budget` block ids (for `DecoupledStorage(pinned_gblocks=...)` /
+    `PinnedCache`).  Falls back to the entry node's block when no navigation
+    graph exists.
+    """
+    blocks = np.asarray(blocks, np.int64)
+    if budget <= 0:
+        return np.empty(0, np.int64)
+    if nav is not None and nav.layers:
+        vids = np.asarray(nav.layers[-1].vids, np.int64)
+    elif entry is not None:
+        vids = np.asarray([entry], np.int64)
+    else:
+        return np.empty(0, np.int64)
+    hot, counts = np.unique(blocks[vids], return_counts=True)
+    order = np.argsort(-counts, kind="stable")
+    return hot[order][:budget].astype(np.int64)
+
+
 def search_nav(
     nav: NavGraph,
     pq_dist_fn,

@@ -26,6 +26,9 @@ class SearchResult:
     n_dist: int              # exact distance computations
     n_pq: int                # PQ estimated distance computations
     hops: int                # pool pops (search path length)
+    cache_hits: int = 0      # block-cache hits (reads that cost no I/O)
+    service_us: float = 0.0  # pipelined I/O service time (qd-overlapped)
+    serial_us: float = 0.0   # same demand misses read strictly serially
 
 
 class _Pool:
@@ -83,8 +86,10 @@ def search_coupled(
     l: int,
     block_level: bool = False,        # False = DiskANN, True = Starling
     max_hops: int | None = None,
+    batch_submit: int | None = None,  # prefetch width (timing only)
+    drop_cache: bool = True,          # False = warm cross-query cache
 ) -> SearchResult:
-    store.device.reset(drop_cache=True)
+    store.reset(drop_cache=drop_cache)
     m_sub = adc_table.shape[0]
     n_pq = 0
     n_dist = 0
@@ -110,7 +115,12 @@ def search_coupled(
         v = pool.ids[i]
         pool.checked[i] = True
         hops += 1
-        rec = store.read_node_block(v)
+        pf: list[int] = []
+        if batch_submit is not None and batch_submit > 1:
+            pf = _prefetch_hints(pool, i, batch_submit - 1,
+                                 lambda u: store.block_of(u),
+                                 exclude={store.block_of(v)})
+        rec = store.read_node_block(v, prefetch=pf)
         if block_level:
             # Starling: evaluate every node of the fetched block (free once
             # the block is resident): exact distances for residents, and
@@ -144,9 +154,35 @@ def search_coupled(
     ds = np.fromiter(results.values(), np.float64, len(results))
     o = np.argsort(ds, kind="stable")[:k]
     st = store.device.stats
+    sch = store.scheduler
     return SearchResult(
         ids=ids[o], dists=ds[o], nio=st.nio, graph_reads=st.graph_reads,
-        vector_reads=st.vector_reads, n_dist=n_dist, n_pq=n_pq, hops=hops)
+        vector_reads=st.vector_reads, n_dist=n_dist, n_pq=n_pq, hops=hops,
+        cache_hits=st.cache_hits, service_us=sch.service_us,
+        serial_us=sch.serial_us)
+
+
+def _prefetch_hints(pool: "_Pool", popped_i: int, width: int,
+                    block_of, exclude: set) -> list[int]:
+    """Blocks of the next `width` unchecked pool candidates (after the one
+    just popped) -- speculative hints for the same batched submission.
+
+    Timing-domain only: the scheduler never lets these touch the cache or
+    the NIO counters, so the search trajectory is bit-identical to the
+    per-read path.
+    """
+    hints: list[int] = []
+    seen = set(exclude)
+    for j in range(len(pool.ids)):
+        if len(hints) >= width:
+            break
+        if j == popped_i or pool.checked[j]:
+            continue
+        b = block_of(pool.ids[j])
+        if b not in seen:
+            seen.add(b)
+            hints.append(b)
+    return hints
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +200,8 @@ def search_bamg(
     rerank: int | None = None,
     rerank_margin: float | None = None,
     max_hops: int | None = None,
+    batch_submit: int | None = None,
+    drop_cache: bool = True,
 ) -> SearchResult:
     """Algorithm 4: pool by PQ distance; each pop loads one graph block and
     runs a bounded (depth alpha) intra-block BFS; final phase loads raw
@@ -173,8 +211,17 @@ def search_bamg(
     candidates are read in ascending PQ order, and once k exact distances
     are known, stop when the next PQ estimate exceeds margin * (current k-th
     exact distance).  None = paper-faithful (read all l candidates).
+
+    `batch_submit` (beyond-paper, pipelined I/O): each pool pop submits the
+    demand graph block together with the blocks of the next
+    ``batch_submit - 1`` unchecked candidates as one batched submission
+    (speculative, timing-domain only), and the re-rank phase submits all its
+    vector-block reads at once.  Results, NIO, and cache behavior are
+    bit-identical to the per-read path; only the modeled service time
+    changes (see io_sim.IOScheduler).  `drop_cache=False` keeps the block
+    cache warm across queries (`warm_cache` serving mode).
     """
-    store.reset(drop_cache=True)
+    store.reset(drop_cache=drop_cache)
     m_sub = adc_table.shape[0]
     n_pq = 0
     n_dist = 0
@@ -203,17 +250,25 @@ def search_bamg(
         hops += 1
         oid_v = int(store.vid2oid[v])
         gb = store.gblock_of_oid(oid_v)
-        blk = store.read_graph_block(gb)
+        pf: list[int] = []
+        if batch_submit is not None and batch_submit > 1:
+            pf = _prefetch_hints(
+                pool, i, batch_submit - 1,
+                lambda u: store.gblock_of_oid(int(store.vid2oid[u])),
+                exclude={gb})
+        blk = store.read_graph_block(gb, prefetch=pf)
         _search_within_block(store, blk, gb, v, pool, pq_dist, explored, alpha)
 
     # refinement: load raw vectors for pool candidates, exact re-rank
     n_rerank = len(pool.ids) if rerank is None else min(rerank, len(pool.ids))
     exact: dict[int, float] = {}
     if rerank_margin is None:
-        # paper-faithful: all candidates, read in OID order for contiguity
+        # paper-faithful: all candidates, read in OID order for contiguity;
+        # in batched mode the whole read set goes down as one submission
         cand = sorted(pool.ids[:n_rerank], key=lambda vv: int(store.vid2oid[vv]))
-        for vv in cand:
-            vec = store.read_vector(int(store.vid2oid[vv]))
+        vecs = store.read_vectors([int(store.vid2oid[vv]) for vv in cand],
+                                  batched=batch_submit is not None)
+        for vv, vec in zip(cand, vecs):
             exact[vv] = _sqd(vec, q)
             n_dist += 1
     else:
@@ -236,9 +291,12 @@ def search_bamg(
     o = np.argsort(ds, kind="stable")[:k]
     gs = store.graph_dev.stats
     vs = store.vector_dev.stats
+    sch = store.scheduler
     return SearchResult(
         ids=ids[o], dists=ds[o], nio=gs.nio + vs.nio, graph_reads=gs.graph_reads,
-        vector_reads=vs.vector_reads, n_dist=n_dist, n_pq=n_pq, hops=hops)
+        vector_reads=vs.vector_reads, n_dist=n_dist, n_pq=n_pq, hops=hops,
+        cache_hits=gs.cache_hits + vs.cache_hits,
+        service_us=sch.service_us, serial_us=sch.serial_us)
 
 
 def _search_within_block(store, blk, gb, v, pool, pq_dist, explored, alpha):

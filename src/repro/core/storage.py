@@ -23,7 +23,7 @@ import dataclasses
 
 import numpy as np
 
-from .io_sim import BLOCK_SIZE, BlockDevice
+from .io_sim import BLOCK_SIZE, BlockDevice, CachePolicy, CostModel, IOScheduler
 
 
 # ---------------------------------------------------------------------------
@@ -40,7 +40,9 @@ class CoupledStorage:
     """DiskANN/Starling node-record layout on the simulator."""
 
     def __init__(self, x: np.ndarray, adj: np.ndarray, order: np.ndarray | None = None,
-                 block_size: int = BLOCK_SIZE, cache_blocks: int = 256):
+                 block_size: int = BLOCK_SIZE, cache_blocks: int = 256,
+                 policy: str | CachePolicy = "lru",
+                 cost: CostModel | None = None):
         n, d = x.shape
         r = adj.shape[1]
         self.n, self.d, self.r = n, d, r
@@ -77,7 +79,9 @@ class CoupledStorage:
             dev_blocks.append(p)
             for _ in range(self.blocks_per_record - 1):
                 dev_blocks.append(None)
-        self.device = BlockDevice(dev_blocks, block_size, cache_blocks, kind="graph")
+        self.device = BlockDevice(dev_blocks, block_size, cache_blocks,
+                                  kind="graph", policy=policy)
+        self.scheduler = IOScheduler(cost)
 
     @property
     def n_blocks(self) -> int:
@@ -86,14 +90,25 @@ class CoupledStorage:
     def block_of(self, vid: int) -> int:
         return int(self.pos[vid]) // self.npb
 
-    def read_node_block(self, vid: int) -> CoupledRecord:
-        """Read the block(s) containing vid's record; returns the payload."""
+    def reset(self, drop_cache: bool = True) -> None:
+        self.device.reset(drop_cache)
+        self.scheduler.reset()
+
+    def read_node_block(self, vid: int, prefetch=()) -> CoupledRecord:
+        """Read the block(s) containing vid's record; returns the payload.
+
+        Multi-block records go down as one batched submission (their span is
+        known up front); `prefetch` adds speculative logical-block hints
+        (timing only -- see io_sim.IOScheduler).
+        """
         b = self.block_of(vid)
         first = int(self._payload_block[b])
-        payload = self.device.read(first)
-        for extra in range(1, self.blocks_per_record):
-            self.device.read(first + extra)
-        return payload
+        span = list(range(first, first + self.blocks_per_record))
+        pf: list[int] = []
+        for lb in prefetch:
+            f = int(self._payload_block[lb])
+            pf.extend(range(f, f + self.blocks_per_record))
+        return self.scheduler.submit(self.device, span, prefetch=pf)[0]
 
     def slot_in_block(self, vid: int) -> int:
         return int(self.pos[vid]) % self.npb
@@ -124,7 +139,10 @@ class DecoupledStorage:
 
     def __init__(self, x: np.ndarray, adj: np.ndarray, blocks: np.ndarray,
                  members: np.ndarray, block_size: int = BLOCK_SIZE,
-                 cache_blocks: int = 256, vec_cache_blocks: int = 256):
+                 cache_blocks: int = 256, vec_cache_blocks: int = 256,
+                 policy: str | CachePolicy = "lru",
+                 vec_policy: str | CachePolicy | None = None,
+                 pinned_gblocks=(), cost: CostModel | None = None):
         n, d = x.shape
         r = adj.shape[1]
         m, c = members.shape
@@ -161,7 +179,10 @@ class DecoupledStorage:
                 nn = nn[nn >= 0]
                 nb[s, : len(nn)] = self.vid2oid[nn]
             payloads.append(GraphBlock(oids=oids, vids=vids, nbrs=nb))
-        self.graph_dev = BlockDevice(payloads, block_size, cache_blocks, kind="graph")
+        self.graph_dev = BlockDevice(payloads, block_size, cache_blocks,
+                                     kind="graph", policy=policy,
+                                     pinned=pinned_gblocks)
+        self.scheduler = IOScheduler(cost)
 
         # --- vector region ---------------------------------------------------
         self.vec_bytes = 4 * d
@@ -184,7 +205,9 @@ class DecoupledStorage:
                 region[off: off + d] = x[v]
             for vb in range(self.vblocks_per_gblock):
                 vec_payloads.append(region[vb * floats_per_block: (vb + 1) * floats_per_block])
-        self.vector_dev = BlockDevice(vec_payloads, block_size, vec_cache_blocks, kind="vector")
+        self.vector_dev = BlockDevice(
+            vec_payloads, block_size, vec_cache_blocks, kind="vector",
+            policy=vec_policy if vec_policy is not None else policy)
 
     def _vec_offset_floats(self, slot: int, floats_per_block: int) -> int:
         """Float offset of slot's vector inside its graph block's region."""
@@ -197,20 +220,51 @@ class DecoupledStorage:
     def gblock_of_oid(self, oid: int) -> int:
         return oid // self.capacity
 
-    def read_graph_block(self, gblock: int) -> GraphBlock:
-        return self.graph_dev.read(gblock)
+    def read_graph_block(self, gblock: int, prefetch=()) -> GraphBlock:
+        """Fetch one graph block; `prefetch` hints further graph blocks for
+        the same batched submission (timing only, never accounting)."""
+        return self.scheduler.submit(self.graph_dev, [gblock],
+                                     prefetch=prefetch)[0]
 
-    def read_vector(self, oid: int) -> np.ndarray:
-        """Fetch a raw vector by OID -- location computed, no map (§4.2)."""
+    def _vec_block_span(self, oid: int) -> tuple[int, int]:
+        """(first vector-device block, float offset within it) for an OID."""
         b, s = divmod(oid, self.capacity)
         floats_per_block = self.block_size // 4
         off = self._vec_offset_floats(s, floats_per_block)
         first = b * self.vblocks_per_gblock + off // floats_per_block
-        n_blocks = self.vblocks_per_vec
-        chunks = [self.vector_dev.read(vb) for vb in range(first, first + n_blocks)]
-        flat = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
-        local = off % floats_per_block
-        return flat[local: local + self.d]
+        return first, off % floats_per_block
+
+    def read_vector(self, oid: int) -> np.ndarray:
+        """Fetch a raw vector by OID -- location computed, no map (§4.2)."""
+        return self.read_vectors([oid], batched=False)[0]
+
+    def read_vectors(self, oids, batched: bool = True) -> list[np.ndarray]:
+        """Fetch raw vectors for `oids` (in order).
+
+        `batched=True` issues all the underlying vector-block reads as one
+        scheduler submission (the re-rank phase knows its whole read set up
+        front); `batched=False` submits them one by one.  Both produce the
+        same reads in the same order, so NIO and cache state are identical
+        -- only the modeled service time differs.
+        """
+        spans = [self._vec_block_span(int(o)) for o in oids]
+        nb = self.vblocks_per_vec
+        if batched:
+            demand: list[int] = []
+            for first, _ in spans:
+                demand.extend(range(first, first + nb))
+            payloads = self.scheduler.submit(self.vector_dev, demand)
+        else:
+            payloads = []
+            for first, _ in spans:
+                for vb in range(first, first + nb):
+                    payloads.append(self.scheduler.read(self.vector_dev, vb))
+        out: list[np.ndarray] = []
+        for i, (_, local) in enumerate(spans):
+            chunks = payloads[i * nb: (i + 1) * nb]
+            flat = np.concatenate(chunks) if nb > 1 else chunks[0]
+            out.append(flat[local: local + self.d])
+        return out
 
     # --- stats ----------------------------------------------------------------
     @property
@@ -224,6 +278,7 @@ class DecoupledStorage:
     def reset(self, drop_cache: bool = True) -> None:
         self.graph_dev.reset(drop_cache)
         self.vector_dev.reset(drop_cache)
+        self.scheduler.reset()
 
 
 def max_capacity_for(r: int, block_size: int = BLOCK_SIZE) -> int:

@@ -1,0 +1,401 @@
+"""Property tests for the I/O simulator: cache policies, pinning, and the
+pipelined scheduler.
+
+Every invariant is exercised twice: with seeded numpy traces (always run, so
+CI without hypothesis still locks the accounting down) and, when hypothesis
+is installed, with generated traces/capacities as well.  The invariants are
+the ones later PRs must not break silently:
+
+  * hits + misses == total reads, nio == graph_reads + vector_reads
+  * cache occupancy never exceeds capacity (any policy, any trace)
+  * LRU evicts exactly the least-recently-used block
+  * reset(drop_cache=False) preserves hit behavior; reset(True) drops it
+  * NIO with an infinite cache == number of distinct blocks touched
+  * the scheduler changes timing, never accounting (batched submissions and
+    speculative prefetch produce bit-identical NIO/cache state)
+"""
+import numpy as np
+import pytest
+
+from repro.core.io_sim import (_MISS, BlockDevice, CostModel, IOScheduler,
+                               LRUCache, PinnedCache, make_policy)
+from repro.core.storage import DecoupledStorage, max_capacity_for
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - container without dev deps
+    HAS_HYPOTHESIS = False
+
+POLICIES = ("lru", "fifo", "clock", "2q")
+SEEDS = (0, 1, 2, 3, 4)
+
+
+def _trace(seed: int, n_blocks: int | None = None, length: int | None = None):
+    """Random skewed read trace: half uniform, half over a small hot set
+    (re-references are what distinguish the policies)."""
+    rng = np.random.default_rng(seed)
+    n_blocks = n_blocks or int(rng.integers(2, 40))
+    length = length or int(rng.integers(1, 300))
+    hot = rng.integers(0, n_blocks, size=max(1, n_blocks // 4))
+    out = []
+    for _ in range(length):
+        if rng.random() < 0.5:
+            out.append(int(rng.choice(hot)))
+        else:
+            out.append(int(rng.integers(0, n_blocks)))
+    return n_blocks, out
+
+
+def _run_trace(dev: BlockDevice, trace, check_occupancy=True):
+    for b in trace:
+        dev.read(b)
+        if check_occupancy:
+            assert len(dev.policy) <= dev.policy.capacity
+
+
+# ---------------------------------------------------------------------------
+# Accounting identities
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_hits_plus_misses_equals_total_reads(policy, seed):
+    n_blocks, trace = _trace(seed)
+    cap = int(np.random.default_rng(seed + 100).integers(1, n_blocks + 4))
+    dev = BlockDevice(list(range(n_blocks)), cache_blocks=cap, kind="graph",
+                      policy=policy)
+    _run_trace(dev, trace)
+    assert dev.stats.cache_hits + dev.stats.nio == len(trace)
+    assert dev.stats.vector_reads == 0        # graph device counts as graph
+    assert dev.stats.total_accesses == len(trace)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_infinite_cache_nio_is_distinct_blocks(policy, seed):
+    n_blocks, trace = _trace(seed)
+    dev = BlockDevice(list(range(n_blocks)), cache_blocks=n_blocks + 1,
+                      kind="vector", policy=policy)
+    _run_trace(dev, trace)
+    assert dev.stats.nio == len(set(trace))
+    assert dev.stats.vector_reads == dev.stats.nio   # kind routes the counter
+
+
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_nio_is_graph_plus_vector_reads(seed):
+    """End-to-end over the decoupled layout: graph + vector devices."""
+    rng = np.random.default_rng(seed)
+    n, d, r = 40, 12, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(0, n, (n, r)).astype(np.int32)
+    cap = max_capacity_for(r)
+    blocks = (np.arange(n) // cap).astype(np.int32)
+    m = int(blocks.max()) + 1
+    members = -np.ones((m, cap), np.int32)
+    for b in range(m):
+        mem = np.nonzero(blocks == b)[0]
+        members[b, :len(mem)] = mem
+    st = DecoupledStorage(x, adj, blocks, members, cache_blocks=2,
+                          vec_cache_blocks=2)
+    for _ in range(60):
+        if rng.random() < 0.5:
+            st.read_graph_block(int(rng.integers(0, m)))
+        else:
+            st.read_vector(int(st.vid2oid[int(rng.integers(0, n))]))
+    g, v = st.graph_dev.stats, st.vector_dev.stats
+    assert g.nio == g.graph_reads and g.vector_reads == 0
+    assert v.nio == v.vector_reads and v.graph_reads == 0
+    assert (g.nio + v.nio) == (g.graph_reads + v.vector_reads)
+
+
+def test_none_payload_counts_as_hit():
+    """Regression: a cached payload of None must register as a hit (the old
+    `_cache.pop(id, None)` miss marker re-read span placeholders forever)."""
+    dev = BlockDevice([None, None, b"x"], cache_blocks=4, kind="graph")
+    assert dev.read(0) is None
+    assert dev.read(0) is None
+    assert dev.stats.graph_reads == 1 and dev.stats.cache_hits == 1
+
+
+def test_miss_sentinel_is_not_none():
+    p = LRUCache(4)
+    p.put(1, None)
+    assert p.get(1) is None and p.get(1) is not _MISS
+    assert p.get(2) is _MISS
+
+
+# ---------------------------------------------------------------------------
+# Policy behavior
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", SEEDS)
+def test_lru_evicts_exactly_least_recently_used(seed):
+    """Model-based check: the resident set must match a reference LRU after
+    every read of a random trace."""
+    from collections import OrderedDict
+    n_blocks, trace = _trace(seed)
+    cap = int(np.random.default_rng(seed + 7).integers(1, n_blocks + 2))
+    dev = BlockDevice(list(range(n_blocks)), cache_blocks=cap, policy="lru")
+    ref: OrderedDict[int, None] = OrderedDict()
+    for b in trace:
+        dev.read(b)
+        if b in ref:
+            ref.move_to_end(b)
+        else:
+            ref[b] = None
+            while len(ref) > cap:
+                ref.popitem(last=False)      # exactly the LRU entry
+        assert set(dev.policy.keys()) == set(ref)
+
+
+def test_lru_eviction_order_direct():
+    dev = BlockDevice(list(range(8)), cache_blocks=3, policy="lru")
+    dev.read(0); dev.read(1); dev.read(2)
+    dev.read(0)                     # 1 is now least-recently-used
+    dev.read(3)                     # evicts exactly 1
+    assert set(dev.policy.keys()) == {0, 2, 3}
+    dev.read(1)
+    assert dev.stats.graph_reads == 5       # 1 was truly evicted
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_reset_keep_cache_preserves_hit_behavior(policy, seed):
+    n_blocks, trace = _trace(seed)
+    dev = BlockDevice(list(range(n_blocks)), cache_blocks=max(2, n_blocks // 2),
+                      policy=policy)
+    _run_trace(dev, trace)
+    resident = [b for b in range(n_blocks) if dev.cached(b)]
+    dev.reset(drop_cache=False)
+    assert dev.stats.nio == 0 and dev.stats.cache_hits == 0
+    for b in resident:
+        dev.read(b)
+    assert dev.stats.nio == 0                      # all still hits
+    assert dev.stats.cache_hits == len(resident)
+    dev.reset(drop_cache=True)
+    if resident:
+        dev.read(resident[0])
+        assert dev.stats.nio == 1                  # cold again
+
+
+def test_fifo_does_not_refresh_on_hit():
+    dev = BlockDevice(list(range(8)), cache_blocks=2, policy="fifo")
+    dev.read(0); dev.read(1)
+    dev.read(0)                  # hit; FIFO keeps 0 the oldest anyway
+    dev.read(2)                  # evicts 0 (oldest insertion), not 1
+    assert set(dev.policy.keys()) == {1, 2}
+
+
+def test_clock_second_chance():
+    dev = BlockDevice(list(range(8)), cache_blocks=2, policy="clock")
+    dev.read(0); dev.read(1)
+    dev.read(0)                  # sets 0's reference bit
+    dev.read(2)                  # hand clears 0's bit, evicts 1
+    assert set(dev.policy.keys()) == {0, 2}
+
+
+def test_2q_scan_resistance():
+    """Blocks re-referenced after their A1in probation land in Am and then
+    survive a long one-pass scan (which only churns A1in)."""
+    dev = BlockDevice(list(range(64)), cache_blocks=8, policy="2q")
+    for b in range(10):          # fill + overflow A1in: 0,1 demoted to ghost
+        dev.read(b)
+    dev.read(0); dev.read(1)     # ghosted -> promoted into Am (hot)
+    for b in range(20, 50):      # long cold scan through A1in
+        dev.read(b)
+    assert dev.cached(0) and dev.cached(1)   # Am survived the scan
+    dev.reset(drop_cache=False)
+    dev.read(0); dev.read(1)
+    assert dev.stats.nio == 0
+
+
+# ---------------------------------------------------------------------------
+# Pinned cache
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_pinned_blocks_never_miss_and_never_evict(seed):
+    n_blocks, trace = _trace(seed, n_blocks=30)
+    pins = (0, 5, 7)
+    dev = BlockDevice(list(range(n_blocks)), cache_blocks=8, policy="lru",
+                      pinned=pins)
+    _run_trace(dev, trace)
+    for p in pins:
+        assert dev.cached(p)
+    before = dev.stats.nio
+    for p in pins:
+        dev.read(p)
+    assert dev.stats.nio == before           # pinned reads are always hits
+    assert len(dev.policy) <= 8              # pins count against capacity
+    dev.reset(drop_cache=True)               # re-pins on reset
+    dev.read(5)
+    assert dev.stats.nio == 0
+
+
+def test_pins_exceeding_capacity_raise():
+    with pytest.raises(ValueError):
+        PinnedCache(2, pins=(0, 1, 2))
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_policy("arc", 8)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: timing never changes accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_batched_submissions_identical_accounting(policy, seed):
+    """The same demand trace, issued per-read vs in random batches, must
+    produce bit-identical NIO, hits, and resident sets."""
+    rng = np.random.default_rng(seed + 50)
+    n_blocks, trace = _trace(seed)
+    cap = max(1, n_blocks // 2)
+    dev_a = BlockDevice(list(range(n_blocks)), cache_blocks=cap, policy=policy)
+    dev_b = BlockDevice(list(range(n_blocks)), cache_blocks=cap, policy=policy)
+    sch_a = IOScheduler(CostModel(qd=1))
+    sch_b = IOScheduler(CostModel(qd=4))
+    for b in trace:
+        sch_a.read(dev_a, b)
+    i = 0
+    while i < len(trace):
+        step = int(rng.integers(1, 6))
+        sch_b.submit(dev_b, trace[i: i + step])
+        i += step
+    assert dev_a.stats.nio == dev_b.stats.nio
+    assert dev_a.stats.cache_hits == dev_b.stats.cache_hits
+    assert set(dev_a.policy.keys()) == set(dev_b.policy.keys())
+    assert sch_a.serial_us == sch_b.serial_us
+    assert sch_a.service_us == sch_a.serial_us        # qd=1: no overlap
+    assert sch_b.service_us <= sch_b.serial_us        # qd=4: overlapped
+
+
+@pytest.mark.parametrize("seed", SEEDS[:3])
+def test_speculative_prefetch_never_touches_accounting(seed):
+    """Random prefetch hints alongside each demand read: NIO, hits, and the
+    resident set must be bit-identical to the hint-free run."""
+    rng = np.random.default_rng(seed + 9)
+    n_blocks, trace = _trace(seed, n_blocks=24)
+    dev_a = BlockDevice(list(range(n_blocks)), cache_blocks=6)
+    dev_b = BlockDevice(list(range(n_blocks)), cache_blocks=6)
+    sch_a, sch_b = IOScheduler(), IOScheduler()
+    for b in trace:
+        sch_a.submit(dev_a, [b])
+        hints = rng.integers(0, n_blocks, size=int(rng.integers(0, 4)))
+        sch_b.submit(dev_b, [b], prefetch=hints.tolist())
+    assert dev_a.stats.nio == dev_b.stats.nio
+    assert dev_a.stats.cache_hits == dev_b.stats.cache_hits
+    assert set(dev_a.policy.keys()) == set(dev_b.policy.keys())
+    assert sch_a.serial_us == sch_b.serial_us         # accounting domain
+    assert sch_b.service_us >= sch_a.service_us - 1e-9  # qd=1: hints only add
+
+
+def test_prefetch_hit_makes_later_demand_free():
+    dev = BlockDevice(list(range(8)), cache_blocks=4)
+    sch = IOScheduler(CostModel(qd=2, read_us=100.0))
+    sch.submit(dev, [0], prefetch=[1])      # 2 reads overlapped at qd=2
+    assert sch.service_us == 100.0 and sch.serial_us == 100.0
+    sch.submit(dev, [1])                    # prefetched: free in time...
+    assert sch.service_us == 100.0
+    assert dev.stats.nio == 2               # ...but still one NIO (data moved)
+    assert sch.prefetch_hits == 1
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_service_never_exceeds_serial(seed):
+    """Invariant: speculation only fills idle queue slots, so the pipelined
+    service time can never exceed the serial baseline -- for any qd, any
+    prefetch hints, any trace."""
+    rng = np.random.default_rng(seed + 1234)
+    n_blocks, trace = _trace(seed, n_blocks=24)
+    qd = int(rng.integers(1, 9))
+    submit_us = float(rng.choice([0.0, 2.0]))
+    dev = BlockDevice(list(range(n_blocks)), cache_blocks=6)
+    sch = IOScheduler(CostModel(qd=qd, submit_us=submit_us))
+    for b in trace:
+        hints = rng.integers(0, n_blocks, size=int(rng.integers(0, 5)))
+        sch.submit(dev, [b], prefetch=hints.tolist())
+    assert sch.service_us <= sch.serial_us + 1e-9
+    if qd == 1 and submit_us == 0.0:
+        assert sch.service_us == sch.serial_us   # no idle slots: no overlap
+
+
+def test_make_policy_instance_with_pins_respects_capacity():
+    """A caller-supplied policy instance + pins must still bound total
+    residency (pins + inner) by the requested capacity."""
+    pol = make_policy(LRUCache(8), 8, pins=(0, 1))
+    assert isinstance(pol, PinnedCache)
+    for b in range(20):
+        pol.put(b, b)
+    pol.put(0, 0); pol.put(1, 1)     # preload pins
+    assert len(pol) <= 8
+    assert pol.contains(0) and pol.contains(1)
+
+
+def test_submission_time_ceil_model():
+    cm = CostModel(read_us=100.0, qd=4)
+    assert cm.submission_us(0) == 0.0
+    assert cm.submission_us(1) == 100.0
+    assert cm.submission_us(4) == 100.0
+    assert cm.submission_us(5) == 200.0
+    assert CostModel(read_us=100.0, qd=1).submission_us(5) == 500.0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis variants (run when the dev deps are installed)
+# ---------------------------------------------------------------------------
+if HAS_HYPOTHESIS:
+    trace_strategy = hst.lists(hst.integers(min_value=0, max_value=31),
+                               min_size=1, max_size=200)
+
+    @settings(max_examples=30, deadline=None)
+    @given(trace=trace_strategy, cap=hst.integers(min_value=1, max_value=40),
+           policy=hst.sampled_from(POLICIES))
+    def test_hyp_occupancy_and_accounting(trace, cap, policy):
+        dev = BlockDevice(list(range(32)), cache_blocks=cap, policy=policy)
+        for b in trace:
+            dev.read(b)
+            assert len(dev.policy) <= cap
+        assert dev.stats.cache_hits + dev.stats.nio == len(trace)
+        if cap >= 32:
+            assert dev.stats.nio == len(set(trace))
+
+    @settings(max_examples=30, deadline=None)
+    @given(trace=trace_strategy, cap=hst.integers(min_value=1, max_value=40))
+    def test_hyp_lru_reference_model(trace, cap):
+        from collections import OrderedDict
+        dev = BlockDevice(list(range(32)), cache_blocks=cap, policy="lru")
+        ref: OrderedDict[int, None] = OrderedDict()
+        for b in trace:
+            dev.read(b)
+            if b in ref:
+                ref.move_to_end(b)
+            else:
+                ref[b] = None
+                while len(ref) > cap:
+                    ref.popitem(last=False)
+            assert set(dev.policy.keys()) == set(ref)
+
+    @settings(max_examples=30, deadline=None)
+    @given(trace=trace_strategy, policy=hst.sampled_from(POLICIES),
+           qd=hst.integers(min_value=1, max_value=8),
+           chunks=hst.lists(hst.integers(min_value=1, max_value=7),
+                            min_size=1, max_size=50))
+    def test_hyp_scheduler_accounting_invariant(trace, policy, qd, chunks):
+        dev_a = BlockDevice(list(range(32)), cache_blocks=8, policy=policy)
+        dev_b = BlockDevice(list(range(32)), cache_blocks=8, policy=policy)
+        sch_a = IOScheduler(CostModel(qd=1))
+        sch_b = IOScheduler(CostModel(qd=qd))
+        for b in trace:
+            sch_a.read(dev_a, b)
+        i = ci = 0
+        while i < len(trace):
+            step = chunks[ci % len(chunks)]
+            sch_b.submit(dev_b, trace[i: i + step])
+            i += step
+            ci += 1
+        assert dev_a.stats.nio == dev_b.stats.nio
+        assert dev_a.stats.cache_hits == dev_b.stats.cache_hits
+        assert set(dev_a.policy.keys()) == set(dev_b.policy.keys())
+        assert sch_b.service_us <= sch_a.service_us + 1e-9

@@ -92,6 +92,112 @@ def test_frontend_shard_smaller_than_k(built):
     np.testing.assert_array_equal(ids, gi)
 
 
+def _random_cfg(seed):
+    """Randomized corpus/search shape for the parity sweep."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(60, 180))
+    d = int(rng.integers(8, 28))
+    k = int(rng.integers(1, 9))
+    l = int(rng.integers(max(k, 8), n + 1))
+    return n, d, k, l
+
+
+def _check_host_engine_parity(seed):
+    """Host `search_bamg` vs `BatchedANNEngine` under an exhaustive config
+    (pool spans the corpus, full exact re-rank, identical entry seeds):
+    identical top-k ids, and both identical to brute force."""
+    from repro.core.search import search_bamg
+    from repro.data.synthetic import make_vector_dataset
+    n, d, k, _ = _random_cfg(seed)
+    ds = make_vector_dataset(f"sweep{seed}", n=n, d=d, nq=6, k_gt=max(k, 1),
+                             n_clusters=max(2, n // 50), seed=seed)
+    idx = BAMGIndex.build(ds.base,
+                          BAMGParams(alpha=2, beta=1.05, r=12, l_build=24,
+                                     knn_k=12, seed=seed))
+    # both sides seed from the full entry-candidate pool: on tiny random
+    # graphs a node can be unreachable from a 4-seed subset, which would
+    # test entry selection, not traversal/re-rank parity.  alpha=n makes the
+    # intra-block BFS exhaustive too (a depth-truncated frontier is marked
+    # checked without expansion, losing reachability the engine's pool-wide
+    # beam keeps).
+    cands = idx.batch_arrays(n_entry_cands=256)["entry_cands"]
+    eng = BatchedANNEngine.from_index(
+        idx, EngineConfig(l=n, max_hops=n, n_entry=len(cands)))
+    ids, _ = eng.search_batch(ds.queries, k)
+    gd, gi = exact_knn(ds.base, ds.queries, k)
+    np.testing.assert_array_equal(ids, gi)
+    for qi, q in enumerate(ds.queries):
+        r = search_bamg(idx.store, idx.codes, idx.codec.adc_table(q), q,
+                        cands.tolist(), k=k, l=n, alpha=n)
+        np.testing.assert_array_equal(ids[qi], r.ids)
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_parity_sweep_host_vs_batched_engine(seed):
+    _check_host_engine_parity(seed)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    @settings(max_examples=3, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=hst.integers(min_value=10, max_value=10_000))
+    def test_parity_sweep_host_vs_batched_engine_hyp(seed):
+        _check_host_engine_parity(seed)
+except ImportError:  # container without dev deps: seeded sweep still runs
+    pass
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_batched_submission_bit_identical_to_per_read(built, seed):
+    """The pipelined batched-submission path (top-alpha frontier prefetch +
+    one-shot re-rank submission, any queue depth) must return bit-identical
+    ids/dists and identical NIO to the per-read path: the scheduler changes
+    timing, never accounting."""
+    ds, idx = built
+    rng = np.random.default_rng(seed)
+    l = int(rng.integers(16, 80))
+    k = int(rng.integers(1, 10))
+    try:
+        for q in ds.queries:
+            r0 = idx.search(q, k=k, l=l, batch_io=False)
+            idx.configure_io(qd=int(rng.integers(2, 16)))
+            r1 = idx.search(q, k=k, l=l, batch_io=True)
+            np.testing.assert_array_equal(r0.ids, r1.ids)
+            np.testing.assert_allclose(r0.dists, r1.dists)
+            assert r0.nio == r1.nio
+            assert r0.graph_reads == r1.graph_reads
+            assert r0.vector_reads == r1.vector_reads
+            assert r0.cache_hits == r1.cache_hits
+            assert r0.serial_us == r1.serial_us      # accounting domain
+            assert r1.service_us <= r1.serial_us + 1e-9   # qd>1 overlaps
+    finally:
+        idx.configure_io(qd=1)    # module-scoped fixture: restore defaults
+
+
+def test_build_copies_params_no_cross_index_leak(tiny_points):
+    """configure_io on one index must not leak knobs into other indexes
+    built from the same (possibly default) params object."""
+    from repro.core.engine import DiskANNIndex, DiskANNParams
+    p = DiskANNParams(r=8, l_build=16)
+    a = DiskANNIndex.build(tiny_points, p)
+    b = DiskANNIndex.build(tiny_points, p)
+    a.configure_io(qd=8, batch_io=True, cache_policy="2q")
+    assert b.params.qd == 1 and not b.params.batch_io
+    assert p.qd == 1 and not p.batch_io and p.cache_policy == "lru"
+
+
+def test_warm_cache_reduces_nio_not_recall(built):
+    ds, idx = built
+    cold = idx.search_batch(ds.queries, k=K, l=48, gt=ds.gt)
+    warm = idx.search_batch(ds.queries, k=K, l=48, gt=ds.gt, warm_cache=True)
+    assert warm.mean_nio < cold.mean_nio
+    assert warm.recall >= cold.recall - 1e-9
+    assert warm.cache_hit_rate > cold.cache_hit_rate
+
+
 def test_sharded_frontend_matches_global_brute_force(built):
     """2-shard scatter-gather at exhaustive budget == global brute force."""
     ds, _ = built
