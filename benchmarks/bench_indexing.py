@@ -1,7 +1,91 @@
-"""Paper Fig. 6 + 7: indexing time and index size."""
+"""Paper Fig. 6 + 7 (indexing time / index size) plus the construction
+backend sweep: end-to-end build wall-clock and recall for
+``backend="host"`` (per-node numpy reference) vs ``backend="batched"``
+(`repro.build` jit'd fixed-shape pipeline) on the same corpus.
+
+``REPRO_BENCH_BUILD_N`` overrides the sweep corpus size (default
+``REPRO_BENCH_N``); the acceptance-scale comparison runs at n>=20k, where
+the batched backend's fixed costs (jit compilation, padding) are
+amortized.  Emits, per backend: build seconds, graph degree, recall@10 /
+NIO of the built graph searched with identical engine parameters, plus
+the host/batched speedup and the recall delta.
+
+The sweep deliberately re-times the host build even though fig6 already
+built the cached base graphs: a fair host-vs-batched comparison must run
+both backends through the same `GraphBuilder` entry point back to back,
+not stitch cached stage timings together.
+"""
+import os
 import time
 
+import numpy as np
+
 from . import common
+
+
+def _bamg_recall(x, graph, codec, codes, queries, gt, l: int = 48):
+    """recall@10 / NIO of a BAMG graph under the standard host engine."""
+    from repro.core.engine import BAMGIndex, BAMGParams
+    from repro.core.storage import DecoupledStorage
+
+    store = DecoupledStorage(x, graph.adj, graph.blocks, graph.members)
+    idx = BAMGIndex(x, graph, codec, codes, store, None,
+                    BAMGParams(r=common.R, use_nav=False))
+    st = idx.search_batch(queries, k=10, l=l, gt=gt)
+    return st.recall, st.mean_nio
+
+
+def build_sweep(regime: str) -> dict:
+    """Host-vs-batched BAMG + Vamana build sweep; returns the emitted rows."""
+    from repro.build import BuildConfig, GraphBuilder
+    from repro.core.pq import train_pq
+    from repro.core.storage import max_capacity_for
+    from repro.data.synthetic import PAPER_REGIMES, make_vector_dataset
+
+    n = int(os.environ.get("REPRO_BENCH_BUILD_N", str(common.BENCH_N)))
+    if n == common.BENCH_N:
+        ds = common.dataset(regime)
+    else:
+        cfg = PAPER_REGIMES[regime]
+        ds = make_vector_dataset(regime, n, cfg["d"], common.BENCH_NQ,
+                                 k_gt=100, n_clusters=cfg["n_clusters"],
+                                 seed=0)
+    x = ds.base
+    cap = max_capacity_for(common.R)
+    codec = train_pq(x, m=16, seed=0)
+    codes = codec.encode(x)
+
+    out = {}
+    for be in ("host", "batched"):
+        gb = GraphBuilder(BuildConfig(backend=be))
+        t0 = time.time()
+        graph = gb.build_bamg(x, cap, alpha=3, beta=1.05, r=common.R,
+                              l_build=common.L_BUILD, knn_k=common.R,
+                              max_degree=common.R)
+        t_bamg = time.time() - t0
+        t0 = time.time()
+        vam_adj, _ = gb.build_vamana(x, r=common.R, l_build=common.L_BUILD)
+        t_vam = time.time() - t0
+        rec, nio = _bamg_recall(x, graph, codec, codes, ds.queries, ds.gt)
+        deg = float((graph.adj >= 0).sum(1).mean())
+        out[be] = dict(t_bamg=t_bamg, t_vam=t_vam, recall=rec, nio=nio,
+                       deg=deg)
+        common.emit(f"build.{regime}.bamg_{be}_s", round(t_bamg, 2),
+                    f"n={n};deg={deg:.1f}")
+        common.emit(f"build.{regime}.vamana_{be}_s", round(t_vam, 2),
+                    f"n={n}")
+        common.emit(f"build.{regime}.recall_{be}", round(rec, 4),
+                    f"l=48;nio={nio:.1f}")
+    common.emit(f"build.{regime}.bamg_speedup",
+                round(out["host"]["t_bamg"] / out["batched"]["t_bamg"], 2),
+                "host_s/batched_s (>=5x on accelerator-class hardware)")
+    common.emit(f"build.{regime}.vamana_speedup",
+                round(out["host"]["t_vam"] / out["batched"]["t_vam"], 2),
+                "host_s/batched_s")
+    common.emit(f"build.{regime}.recall_delta",
+                round(out["batched"]["recall"] - out["host"]["recall"], 4),
+                "batched - host (acceptance: within +/-0.01)")
+    return out
 
 
 def run(regimes=("sift-like",)) -> None:
@@ -26,6 +110,7 @@ def run(regimes=("sift-like",)) -> None:
         common.emit(f"fig7_size.{regime}.diskann",
                     round(common.diskann_index(regime).index_bytes() / 2 ** 20, 2),
                     "MiB coupled")
+        build_sweep(regime)
 
 
 if __name__ == "__main__":

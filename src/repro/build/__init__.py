@@ -1,0 +1,28 @@
+"""Batched fixed-shape index construction (build-side counterpart of
+`repro.serve`).
+
+The host builders in `repro.core.graph_build` / `repro.core.bamg` walk the
+graph one node at a time through Python heaps -- exact, but serial.  This
+package routes the three expensive construction stages through jit'd
+fixed-shape array programs:
+
+- `frontier`: whole-batch beam candidate collection ((B, L) insert-sort
+  pool, exact squared-L2 scoring).
+- `prune`: vectorized masked RobustPrune / MRNG edge selection.
+- `bamg_refine`: Algorithm 2 with all intra-block monotone probes
+  ((v, q) pairs) evaluated in one padded gather loop.
+- `builder.GraphBuilder`: the facade consumed by the engine layer, with
+  `backend="host"` preserving the numpy reference oracle.
+"""
+from .builder import BuildConfig, GraphBuilder
+from .frontier import frontier_pools
+from .pool import pool_merge
+from .prune import robust_prune_batch
+
+__all__ = [
+    "BuildConfig",
+    "GraphBuilder",
+    "frontier_pools",
+    "pool_merge",
+    "robust_prune_batch",
+]

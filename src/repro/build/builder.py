@@ -1,0 +1,218 @@
+"""`GraphBuilder`: the construction facade consumed by the engine layer.
+
+Selects between two backends for the three expensive build stages:
+
+- ``backend="host"``: the original per-node numpy/heapq builders in
+  `repro.core.graph_build` / `repro.core.bamg` -- the reference oracle
+  (exact paper semantics, used by the parity tests).
+- ``backend="batched"``: jit'd fixed-shape pipelines -- whole node batches
+  run the candidate beam (`repro.build.frontier`), the RobustPrune scan
+  (`repro.build.prune`) and the Algorithm-2 intra-block probes
+  (`repro.build.bamg_refine`) as array programs.
+
+Batched semantics vs host: NSG and the BAMG refinement are node-order
+independent, so the batched NSG differs from the host's only through the
+frontier's fixed-hop termination (recall-equivalent; the refinement is
+bit-identical given the same base graph).  Batched Vamana applies each
+batch's edge updates after searching the whole batch on one graph snapshot
+(DiskANN-style batch insertion), where the host updates after every node.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph_build as host
+from repro.core.bamg import BAMGGraph, build_bamg_from
+from repro.core.block_assign import bnf_blocks
+from repro.core.distances import knn_graph, medoid
+
+from .bamg_refine import refine_bamg_batched
+from .chunking import map_chunks
+from .frontier import frontier_pools
+from .knn import clustered_knn_graph
+from .prune import robust_prune_batch
+
+BACKENDS = ("host", "batched")
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    backend: str = "host"        # "host" (reference oracle) | "batched"
+    batch_size: int = 256        # nodes per jitted frontier/prune step
+    pair_chunk: int = 4096       # (v, q) probe pairs per jitted BAMG chunk
+    beam_width: int = 8          # frontier expansions per hop
+    max_hops: int | None = None  # frontier hops (default: ~ef/beam_width)
+    knn_mode: str = "clustered"  # batched NSG kNN stage: "clustered"|"exact"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.knn_mode not in ("clustered", "exact"):
+            raise ValueError(f"knn_mode must be 'clustered' or 'exact', "
+                             f"got {self.knn_mode!r}")
+
+
+class GraphBuilder:
+    """Facade over the host and batched construction pipelines."""
+
+    def __init__(self, config: BuildConfig = BuildConfig()):
+        self.config = config
+
+    # -- helpers ------------------------------------------------------------
+    def _prune(self, x, p_ids, cand_ids, r: int, alpha: float) -> np.ndarray:
+        """Chunked batched RobustPrune with last-chunk padding, so one
+        compilation per candidate width serves the whole build.  `x` may be
+        a preloaded jnp array (no per-chunk upload); independent chunks are
+        pipelined two-deep."""
+        b = self.config.batch_size
+        p_ids = np.asarray(p_ids, np.int64)
+        cand_ids = np.asarray(cand_ids, np.int32)
+        out = np.empty((len(p_ids), r), np.int32)
+
+        def run(s):
+            p = p_ids[s : s + b]
+            c = cand_ids[s : s + b]
+            pad = b - len(p)
+            if pad:
+                p = np.concatenate([p, np.zeros(pad, p.dtype)])
+                c = np.concatenate(
+                    [c, -np.ones((pad, c.shape[1]), c.dtype)])
+            kept = robust_prune_batch(x, p, c, None, r=r, alpha=alpha)
+            out[s : s + b - pad] = kept[: len(out) - s]
+
+        map_chunks(list(range(0, len(p_ids), b)), run)
+        return out
+
+    # -- Vamana (DiskANN) ----------------------------------------------------
+    def build_vamana(self, x: np.ndarray, r: int = 32, l_build: int = 64,
+                     alpha: float = 1.2, seed: int = 0,
+                     passes: int = 2) -> tuple[np.ndarray, int]:
+        if self.config.backend == "host":
+            return host.build_vamana(x, r=r, l_build=l_build, alpha=alpha,
+                                     seed=seed, passes=passes)
+        n = len(x)
+        rng = np.random.default_rng(seed)
+        neighbors = [rng.choice(n, size=min(r, n - 1), replace=False)
+                     for _ in range(n)]
+        neighbors = [row[row != i][:r] for i, row in enumerate(neighbors)]
+        adj = host._pad_adj([np.asarray(v, np.int32) for v in neighbors], r)
+        med = medoid(x)
+        bs = self.config.batch_size
+        xj = jnp.asarray(x, jnp.float32)
+        n2 = jnp.sum(xj * xj, axis=1)
+        alphas = [1.0] * (passes - 1) + [alpha]
+        for a in alphas:
+            order = rng.permutation(n)
+            for s in range(0, n, bs):
+                nodes = order[s : s + bs]
+                pool_ids, _ = frontier_pools(
+                    x, adj, [med], nodes, ef=l_build,
+                    max_hops=self.config.max_hops, batch=bs,
+                    width=self.config.beam_width,
+                    device_arrays=(xj, n2, jnp.asarray(adj, jnp.int32)))
+                cand = np.concatenate([pool_ids, adj[nodes]], axis=1)
+                kept = self._prune(xj, nodes, cand, r=r, alpha=a)
+                for bi, p in enumerate(nodes.tolist()):
+                    row = kept[bi]
+                    row = row[row >= 0]
+                    adj[p] = -1
+                    adj[p, : len(row)] = row
+                # reverse edges; rows that overflow collect for a batched
+                # re-prune instead of the host's per-insert prune
+                pending: dict[int, list[int]] = {}
+                for bi, p in enumerate(nodes.tolist()):
+                    for v in kept[bi][kept[bi] >= 0].tolist():
+                        row = adj[v]
+                        if p in row[row >= 0] or p in pending.get(v, ()):
+                            continue
+                        slot = np.nonzero(row < 0)[0]
+                        if len(slot):
+                            adj[v, slot[0]] = p
+                        else:
+                            pending.setdefault(v, []).append(p)
+                if pending:
+                    vs = np.asarray(sorted(pending), np.int64)
+                    # bucket the candidate width (power of two) so the jit
+                    # cache sees a handful of shapes, not one per batch
+                    need = max(len(v) for v in pending.values())
+                    pad2 = 4
+                    while pad2 < need:
+                        pad2 *= 2
+                    cand2 = -np.ones((len(vs), r + pad2), np.int32)
+                    for i, v in enumerate(vs.tolist()):
+                        merged = adj[v][adj[v] >= 0].tolist() + pending[v]
+                        cand2[i, : len(merged)] = merged
+                    kept2 = self._prune(xj, vs, cand2, r=r, alpha=a)
+                    for i, v in enumerate(vs.tolist()):
+                        row = kept2[i]
+                        row = row[row >= 0]
+                        adj[v] = -1
+                        adj[v, : len(row)] = row
+        return adj, med
+
+    # -- NSG -----------------------------------------------------------------
+    def build_nsg(self, x: np.ndarray, r: int = 32, l_build: int = 64,
+                  knn_k: int = 32, seed: int = 0) -> tuple[np.ndarray, int]:
+        if self.config.backend == "host":
+            return host.build_nsg(x, r=r, l_build=l_build, knn_k=knn_k,
+                                  seed=seed)
+        n = len(x)
+        if self.config.knn_mode == "clustered":
+            knn = clustered_knn_graph(x, knn_k, seed=seed)
+        else:
+            knn = knn_graph(x, knn_k)
+        med = medoid(x)
+        xj = jnp.asarray(x, jnp.float32)
+        n2 = jnp.sum(xj * xj, axis=1)
+        pool_ids, _ = frontier_pools(
+            x, knn, [med], np.arange(n), ef=l_build,
+            max_hops=self.config.max_hops, batch=self.config.batch_size,
+            width=self.config.beam_width,
+            device_arrays=(xj, n2, jnp.asarray(knn, jnp.int32)))
+        cand = np.concatenate([pool_ids, knn], axis=1)
+        kept = self._prune(xj, np.arange(n), cand, r=r, alpha=1.0)
+        adj = host._pad_adj([row[row >= 0] for row in kept], r)
+        host.connect_to_entry(x, adj, med)
+        return adj, med
+
+    # -- BAMG ----------------------------------------------------------------
+    def refine_bamg(self, x: np.ndarray, nsg_adj: np.ndarray, entry: int,
+                    blocks: np.ndarray, capacity: int, alpha: int = 3,
+                    beta: float = 1.0, occlusion_ref: str = "rule",
+                    sibling_edges: bool = True,
+                    max_degree: int | None = None) -> BAMGGraph:
+        """Algorithm 2 given a prebuilt base graph + block assignment.
+
+        The batched backend is bit-identical to the host given the same
+        inputs (only the intra-block probes move to device)."""
+        if self.config.backend == "host":
+            return build_bamg_from(x, nsg_adj, entry, blocks, capacity,
+                                   alpha=alpha, beta=beta,
+                                   occlusion_ref=occlusion_ref,
+                                   sibling_edges=sibling_edges,
+                                   max_degree=max_degree)
+        return refine_bamg_batched(x, nsg_adj, entry, blocks, capacity,
+                                   alpha=alpha, beta=beta,
+                                   occlusion_ref=occlusion_ref,
+                                   sibling_edges=sibling_edges,
+                                   max_degree=max_degree,
+                                   pair_chunk=self.config.pair_chunk)
+
+    def build_bamg(self, x: np.ndarray, capacity: int, alpha: int = 3,
+                   beta: float = 1.0, r: int = 32, l_build: int = 64,
+                   knn_k: int = 32, seed: int = 0,
+                   occlusion_ref: str = "rule", sibling_edges: bool = True,
+                   max_degree: int | None = None) -> BAMGGraph:
+        """build_BAMG(X, alpha, beta) -- Algorithm 2 end to end."""
+        nsg_adj, entry = self.build_nsg(x, r=r, l_build=l_build,
+                                        knn_k=knn_k, seed=seed)
+        blocks = bnf_blocks(nsg_adj, capacity, seed=seed)
+        return self.refine_bamg(x, nsg_adj, entry, blocks, capacity,
+                                alpha=alpha, beta=beta,
+                                occlusion_ref=occlusion_ref,
+                                sibling_edges=sibling_edges,
+                                max_degree=max_degree)

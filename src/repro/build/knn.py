@@ -1,0 +1,121 @@
+"""Clustered approximate kNN graph for the batched build backend.
+
+The host NSG pipeline starts from an exact kNN graph -- an O(n^2 d)
+all-pairs top-k that dwarfs every other stage as n grows.  The batched
+backend replaces it with the standard IVF/EFANNA-style candidate
+generation: k-means the corpus into ~sqrt(n) clusters (jit'd Lloyd
+iterations), then compute each point's exact top-k among the members of
+its cluster's `n_probe` nearest clusters only -- one padded matmul per
+cluster, O(n * n_probe * n/c * d) total.
+
+The result is a kNN graph with the same contract as
+`repro.core.distances.knn_graph` (int32 (n, k), -1 padded, self excluded)
+whose rows are exact within the probed candidate set.  NSG construction
+consumes kNN rows only as supplemental candidates next to the frontier
+pool, so the occasional missed true neighbor is recovered by the beam --
+end recall stays within the parity budget (tests/test_build_parity.py).
+
+Shapes are bucketed to powers of two so a handful of compilations serve
+all clusters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import knn_graph, pairwise_sq_l2
+
+_PAD = 1e17  # huge-norm sentinel row: never enters a top-k (cf. l2_topk)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_chunk(q, base, k: int):
+    d = (jnp.sum(q * q, axis=1, keepdims=True)
+         + jnp.sum(base * base, axis=1)[None, :]
+         - 2.0 * (q @ base.T))
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+@jax.jit
+def _assign(x, centers):
+    d = (jnp.sum(x * x, axis=1, keepdims=True)
+         + jnp.sum(centers * centers, axis=1)[None, :]
+         - 2.0 * (x @ centers.T))
+    return jnp.argmin(d, axis=1)
+
+
+def _kmeans(x: np.ndarray, c: int, iters: int, seed: int) -> np.ndarray:
+    """Lloyd's algorithm; returns (n,) int cluster assignment."""
+    n = len(x)
+    rng = np.random.default_rng(seed)
+    centers = x[rng.choice(n, size=c, replace=False)].astype(np.float32)
+    xj = jnp.asarray(x, jnp.float32)
+    assign = None
+    for _ in range(iters):
+        assign = np.asarray(_assign(xj, jnp.asarray(centers)))
+        sums = np.zeros((c, x.shape[1]), np.float64)
+        np.add.at(sums, assign, x)
+        counts = np.bincount(assign, minlength=c)
+        live = counts > 0
+        centers[live] = (sums[live] / counts[live, None]).astype(np.float32)
+    return assign
+
+
+def _bucket(m: int) -> int:
+    """Next power of two >= m (min 32) -- bounds jit recompilations."""
+    b = 32
+    while b < m:
+        b *= 2
+    return b
+
+
+def clustered_knn_graph(
+    x: np.ndarray,
+    k: int,
+    n_clusters: int | None = None,
+    n_probe: int = 8,
+    iters: int = 4,
+    seed: int = 0,
+) -> np.ndarray:
+    """Approximate kNN graph via per-cluster probed exact top-k."""
+    n, d = x.shape
+    c = n_clusters or max(8, int(np.sqrt(n)))
+    c = min(c, n)
+    if n <= 2048 or c < n_probe:     # small corpora: exact is already cheap
+        return knn_graph(x, k)
+    assign = _kmeans(x, c, iters, seed)
+    centers = np.zeros((c, d), np.float64)
+    np.add.at(centers, assign, x)
+    counts = np.bincount(assign, minlength=c)
+    centers[counts > 0] /= counts[counts > 0, None]
+    # n_probe nearest clusters per cluster (by center distance, incl. self)
+    cd = pairwise_sq_l2(centers, centers)
+    probes = np.argsort(cd, axis=1, kind="stable")[:, :n_probe]
+
+    members = [np.nonzero(assign == ci)[0] for ci in range(c)]
+    adj = -np.ones((n, k), np.int32)
+    for ci in range(c):
+        q_ids = members[ci]
+        if not len(q_ids):
+            continue
+        cand = np.concatenate([members[pj] for pj in probes[ci]])
+        kk = min(k + 1, len(cand))
+        qb = _bucket(len(q_ids))
+        cb = _bucket(len(cand))
+        q = np.zeros((qb, d), np.float32)
+        q[: len(q_ids)] = x[q_ids]
+        base = np.full((cb, d), _PAD, np.float32)
+        base[: len(cand)] = x[cand]
+        _, idx = _topk_chunk(jnp.asarray(q), jnp.asarray(base), kk)
+        idx = np.asarray(idx)[: len(q_ids)]
+        ids = np.where(idx < len(cand), cand[np.clip(idx, 0, len(cand) - 1)],
+                       -1)
+        for row_i, p in enumerate(q_ids.tolist()):
+            row = ids[row_i]
+            row = row[(row != p) & (row >= 0)][:k]
+            adj[p, : len(row)] = row
+    return adj

@@ -1,0 +1,49 @@
+"""The fixed-shape (B, L) insert-sort candidate pool.
+
+Consumed by the batched serving engine (`repro.serve.ann_engine`): a
+sorted (ids, dists, expanded) pool per row, merging new candidates with
+two stable argsorts -- no Python heaps, one compilation for the lifetime
+of the process.  The construction frontier (`repro.build.frontier`) keeps
+the same pool *shape* but inlines a leaner merge (single top_k; its
+(B, N) seen mask already guarantees candidates are distinct and unseen,
+which the serve path cannot assume).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pool_merge(pool_ids, pool_d, pool_exp, cand_ids, cand_d, l: int):
+    """Vectorized insert-sort of candidates into the sorted (B, L) pool.
+
+    Duplicate ids collapse to the incumbent pool entry (stable sort by id
+    keeps the lower concat index first, and the pool occupies indices
+    0..L-1), so expanded flags survive re-insertion and a node is not
+    re-expanded *while it stays in the pool*.  A node evicted past L loses
+    its flag; if the beam later re-encounters it as a best unexpanded
+    candidate it is re-expanded -- the price of a fixed-shape pool vs the
+    host engine's unbounded `explored` set.  In practice eviction means L
+    closer candidates exist, so re-expansion is rare and costs only a hop,
+    never correctness.  Returns the new (ids, dists, expanded), sorted
+    ascending by dist with invalid entries (+inf, id=-1) at the tail.
+    """
+    sentinel = jnp.iinfo(jnp.int32).max
+    ids = jnp.concatenate([pool_ids, cand_ids.astype(jnp.int32)], axis=1)
+    d = jnp.concatenate([pool_d, cand_d], axis=1)
+    exp = jnp.concatenate(
+        [pool_exp, jnp.zeros(cand_ids.shape, bool)], axis=1)
+    d = jnp.where(ids < 0, jnp.inf, d)
+    key = jnp.where(ids < 0, sentinel, ids)
+    order = jnp.argsort(key, axis=1, stable=True)
+    sid = jnp.take_along_axis(key, order, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    d_s = jnp.take_along_axis(d, order, axis=1)
+    exp_s = jnp.take_along_axis(exp, order, axis=1)
+    dup = jnp.pad(sid[:, 1:] == sid[:, :-1], ((0, 0), (1, 0)))
+    ids_s = jnp.where(dup, -1, ids_s)
+    d_s = jnp.where(dup, jnp.inf, d_s)
+    exp_s = jnp.where(dup, False, exp_s)
+    o2 = jnp.argsort(d_s, axis=1, stable=True)[:, :l]
+    return (jnp.take_along_axis(ids_s, o2, axis=1),
+            jnp.take_along_axis(d_s, o2, axis=1),
+            jnp.take_along_axis(exp_s, o2, axis=1))

@@ -93,11 +93,23 @@ def build_bamg_from(
     occlusion_ref: str = "rule",
     sibling_edges: bool = True,
     max_degree: int | None = None,
+    probe=None,
 ) -> BAMGGraph:
-    """Algorithm 2 given a prebuilt base graph + block assignment."""
+    """Algorithm 2 given a prebuilt base graph + block assignment.
+
+    `probe(u, v, q, q_vec, dvq) -> float` supplies the intra-block
+    monotone-search minimum `delta(C[0], q)` for the occlusion test; the
+    default runs the host `_block_search_toward`.  The batched backend
+    (`repro.build.bamg_refine`) passes a lookup into device-precomputed
+    walks, so both backends share this scan verbatim and cannot diverge.
+    """
     n = len(x)
     r = nsg_adj.shape[1]
     adj_lists = [row[row >= 0].astype(np.int64) for row in nsg_adj]
+    if probe is None:
+        def probe(u, v, q, q_vec, dvq):
+            return _block_search_toward(x, adj_lists, blocks, v, q_vec,
+                                        alpha)
     new_lists: list[list[int]] = [[] for _ in range(n)]
 
     # Pass 1: intra-block edges are kept verbatim (Alg. 2 lines 7-8).
@@ -125,7 +137,7 @@ def build_bamg_from(
             for v, dvq_u in zip(r_out, r_out_d):
                 dvv = q_vec - x[v]
                 dvq = float(np.dot(dvv, dvv))  # delta(v, q)
-                best = _block_search_toward(x, adj_lists, blocks, v, q_vec, alpha)
+                best = probe(u, v, q, q_vec, dvq)
                 ref = dvq if occlusion_ref == "alg2" else duq
                 if best * beta < ref:
                     occlude = True

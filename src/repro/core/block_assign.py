@@ -25,15 +25,32 @@ def random_blocks(n: int, c: int, seed: int = 0) -> np.ndarray:
     return out
 
 
+def undirected_neighbor_lists(adj: np.ndarray) -> list[list[int]]:
+    """Deduplicated undirected view of a padded adjacency (n, R).
+
+    A symmetric edge (u->v and v->u both present) contributes each endpoint
+    to the other's list exactly once -- naive per-directed-edge insertion
+    would add it twice and inflate block-neighbor frequencies.
+    """
+    n = adj.shape[0]
+    valid = adj >= 0
+    src = np.repeat(np.arange(n, dtype=np.int64), adj.shape[1])[valid.ravel()]
+    dst = adj.ravel()[valid.ravel()].astype(np.int64)
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    keep = lo != hi                       # drop self loops
+    edges = np.unique(np.stack([lo[keep], hi[keep]], axis=1), axis=0)
+    und: list[list[int]] = [[] for _ in range(n)]
+    for a, b in edges.tolist():
+        und[a].append(b)
+        und[b].append(a)
+    return und
+
+
 def bnf_blocks(adj: np.ndarray, c: int, seed: int = 0) -> np.ndarray:
     """Starling-style BNF block shuffling on a padded adjacency (n, R)."""
     n = adj.shape[0]
-    und: list[list[int]] = [[] for _ in range(n)]  # undirected view
-    for u in range(n):
-        for v in adj[u]:
-            if v >= 0:
-                und[u].append(int(v))
-                und[int(v)].append(u)
+    und = undirected_neighbor_lists(adj)
     blocks = -np.ones(n, np.int32)
     freq = np.zeros(n, np.int64)
     rng = np.random.default_rng(seed)

@@ -47,22 +47,37 @@ def exact_knn(base: np.ndarray, queries: np.ndarray, k: int, chunk: int = 1024):
 
 
 def knn_graph(x: np.ndarray, k: int, chunk: int = 1024) -> np.ndarray:
-    """Exact directed kNN graph (self excluded). Returns int32 (n, k)."""
-    _, ids = exact_knn(x, x, k + 1, chunk=chunk)
+    """Exact directed kNN graph (self excluded). Returns int32 (n, k).
+
+    Rows shorter than k (corpora with fewer than k+1 points) are padded
+    with -1, the standard missing-edge sentinel -- consumers skip
+    negatives.
+    """
     n = x.shape[0]
-    rows = []
+    _, ids = exact_knn(x, x, min(k + 1, n), chunk=chunk)
+    adj = -np.ones((n, k), np.int32)
     for i in range(n):
         row = ids[i]
         row = row[row != i][:k]
-        if len(row) < k:  # degenerate duplicates; pad with first entries
-            row = np.concatenate([row, row[: k - len(row)]])
-        rows.append(row)
-    return np.asarray(rows, np.int32)
+        adj[i, : len(row)] = row
+    return adj
 
 
 def medoid(x: np.ndarray, sample: int = 4096, seed: int = 0) -> int:
-    """Approximate medoid: point closest to the dataset mean."""
+    """Approximate medoid: point closest to the dataset mean.
+
+    For n > sample the argmin is restricted to a seeded uniform sample of
+    candidate points (the mean still uses every point) -- O(sample * d)
+    distance work instead of O(n * d), standard for billion-scale builds.
+    `sample=None` forces the exact argmin.
+    """
     mean = x.mean(axis=0, keepdims=True)
+    n = len(x)
+    if sample is not None and n > sample:
+        cand = np.random.default_rng(seed).choice(n, size=sample,
+                                                  replace=False)
+        d = pairwise_sq_l2(mean, x[cand])[0]
+        return int(cand[np.argmin(d)])
     d = pairwise_sq_l2(mean, x)[0]
     return int(np.argmin(d))
 

@@ -43,10 +43,12 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .bamg import BAMGGraph, build_bamg_from
+from repro.build import BuildConfig, GraphBuilder
+
+from .bamg import BAMGGraph
 from .block_assign import bnf_blocks, block_members
 from .distances import recall_at_k
-from .graph_build import build_nsg, build_vamana, degree_stats
+from .graph_build import build_vamana, degree_stats
 from .io_sim import BLOCK_SIZE, CostModel
 from .navgraph import (NavGraph, build_navgraph, nav_pin_gblocks, search_nav)
 from .pq import PQCodec, train_pq
@@ -84,6 +86,18 @@ def _configure_coupled_io(idx, cache_policy, cache_blocks, qd, batch_io):
                                cost=CostModel(qd=p.qd))
     idx.cost = idx.store.scheduler.cost
     return idx
+
+
+def _builder_for(params) -> GraphBuilder:
+    """GraphBuilder from an index params dataclass (`build_backend`:
+    "host" keeps the numpy reference pipeline, "batched" routes the
+    expensive stages through `repro.build`'s jit'd fixed-shape programs)."""
+    knn = getattr(params, "build_knn", "clustered")  # BAMG-only knob:
+    # Vamana (DiskANN/Starling) has no kNN stage, so only BAMGParams
+    # carries it
+    return GraphBuilder(BuildConfig(backend=params.build_backend,
+                                    batch_size=params.build_batch,
+                                    knn_mode=knn))
 
 
 def _pick_pq_m(d: int, target: int | None = None) -> int:
@@ -156,6 +170,8 @@ class DiskANNParams:
     cache_blocks: int = 256          # block-cache capacity
     qd: int = 1                      # I/O queue depth (pipelined scheduler)
     batch_io: bool = False           # batched submissions + prefetch
+    build_backend: str = "host"      # graph construction: "host" | "batched"
+    build_batch: int = 256           # nodes per batched-build step
     seed: int = 0
 
 
@@ -173,8 +189,9 @@ class DiskANNIndex:
     @classmethod
     def build(cls, x: np.ndarray, params: DiskANNParams = DiskANNParams()):
         params = dataclasses.replace(params)   # configure_io mutates in place
-        adj, entry = build_vamana(x, r=params.r, l_build=params.l_build,
-                                  alpha=params.alpha, seed=params.seed)
+        adj, entry = _builder_for(params).build_vamana(
+            x, r=params.r, l_build=params.l_build, alpha=params.alpha,
+            seed=params.seed)
         m = params.pq_m or _pick_pq_m(x.shape[1])
         codec = train_pq(x, m=m, seed=params.seed)
         codes = codec.encode(x)
@@ -227,6 +244,8 @@ class StarlingParams:
     cache_blocks: int = 256
     qd: int = 1
     batch_io: bool = False
+    build_backend: str = "host"  # graph construction: "host" | "batched"
+    build_batch: int = 256       # nodes per batched-build step
     seed: int = 0
 
 
@@ -247,8 +266,9 @@ class StarlingIndex:
     @classmethod
     def build(cls, x: np.ndarray, params: StarlingParams = StarlingParams()):
         params = dataclasses.replace(params)   # configure_io mutates in place
-        adj, entry = build_vamana(x, r=params.r, l_build=params.l_build,
-                                  alpha=params.alpha, seed=params.seed)
+        adj, entry = _builder_for(params).build_vamana(
+            x, r=params.r, l_build=params.l_build, alpha=params.alpha,
+            seed=params.seed)
         npb = coupled_nodes_per_block(x.shape[1], params.r)
         blocks = bnf_blocks(adj, npb, seed=params.seed)
         order = np.argsort(blocks, kind="stable").astype(np.int64)
@@ -358,6 +378,9 @@ class BAMGParams:
     qd: int = 1                      # I/O queue depth (pipelined scheduler)
     batch_io: bool = False           # batched submissions (top-alpha + rerank)
     pin_nav_blocks: int = 0          # nav-entry graph blocks pinned in memory
+    build_backend: str = "host"      # graph construction: "host" | "batched"
+    build_batch: int = 256           # nodes per batched-build step
+    build_knn: str = "clustered"     # batched kNN stage: "clustered"|"exact"
     seed: int = 0
 
 
@@ -377,15 +400,16 @@ class BAMGIndex:
     @classmethod
     def build(cls, x: np.ndarray, params: BAMGParams = BAMGParams()):
         p = dataclasses.replace(params)        # configure_io mutates in place
-        nsg_adj, entry = build_nsg(x, r=p.r, l_build=p.l_build, knn_k=p.knn_k,
-                                   seed=p.seed)
+        builder = _builder_for(p)
+        nsg_adj, entry = builder.build_nsg(x, r=p.r, l_build=p.l_build,
+                                           knn_k=p.knn_k, seed=p.seed)
         capacity = p.capacity or max_capacity_for(p.r)
         blocks = bnf_blocks(nsg_adj, capacity, seed=p.seed)
         if p.use_bmrng_prune:
-            graph = build_bamg_from(x, nsg_adj, entry, blocks, capacity,
-                                    alpha=p.alpha, beta=p.beta,
-                                    sibling_edges=p.sibling_edges,
-                                    max_degree=p.r)
+            graph = builder.refine_bamg(x, nsg_adj, entry, blocks, capacity,
+                                        alpha=p.alpha, beta=p.beta,
+                                        sibling_edges=p.sibling_edges,
+                                        max_degree=p.r)
         else:  # ablation: same layout, no block-aware pruning
             graph = BAMGGraph(adj=nsg_adj, blocks=np.asarray(blocks, np.int32),
                               members=block_members(blocks, capacity),

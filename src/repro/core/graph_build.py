@@ -177,17 +177,23 @@ def build_nsg(
     for p in range(n):
         vis_ids, vis_d = greedy_search(x, knn, med, x[p], ef=l_build)
         cand = np.unique(np.concatenate([vis_ids.astype(np.int64), knn[p].astype(np.int64)]))
-        cand = cand[cand != p]
+        cand = cand[(cand != p) & (cand >= 0)]   # drop -1 kNN padding
         cd = _dists_to(x, cand, x[p])
         kept = robust_prune(x, p, cand, cd, r, alpha=1.0)
         neighbors.append(kept)
     adj = _pad_adj(neighbors, r)
+    connect_to_entry(x, adj, med)
+    return adj, med
 
-    # connectivity: BFS from medoid; attach unreachable nodes to their
-    # nearest reachable neighbor (the NSG "tree spanning" step).
+
+def connect_to_entry(x: np.ndarray, adj: np.ndarray, entry: int) -> None:
+    """In-place NSG "tree spanning" step: BFS from `entry`; attach every
+    unreachable node to its nearest reachable neighbor (force-linking into
+    the last slot when the row is full -- connectivity beats pruning)."""
+    n, r = adj.shape
     reached = np.zeros(n, bool)
-    stack = [med]
-    reached[med] = True
+    stack = [entry]
+    reached[entry] = True
     while stack:
         v = stack.pop()
         for u in adj[v]:
@@ -205,9 +211,8 @@ def build_nsg(
             if len(slot):
                 adj[v, slot[0]] = m
             else:
-                adj[v, r - 1] = m  # force-link: connectivity beats pruning
+                adj[v, r - 1] = m
             reached[m] = True
-    return adj, med
 
 
 def degree_stats(adj: np.ndarray, blocks: np.ndarray | None = None) -> dict:

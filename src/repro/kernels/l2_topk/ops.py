@@ -37,6 +37,22 @@ def l2_topk(queries: jnp.ndarray, base: jnp.ndarray, k: int,
     return vals[:b], ids[:b]
 
 
+@jax.jit
+def sq_l2_rowwise(queries: jnp.ndarray, bases: jnp.ndarray,
+                  valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-row exact squared L2: queries (B, D) vs bases (B, C, D) -> (B, C).
+
+    The scoring core of `l2_topk_rowwise` without the top-k selection --
+    used where the caller keeps its own pool (the batched build frontier
+    merges all C scores, not just the best k).  Invalid entries get +inf.
+    """
+    diff = bases.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)
+    if valid is not None:
+        d = jnp.where(valid, d, jnp.inf)
+    return d
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def l2_topk_rowwise(queries: jnp.ndarray, bases: jnp.ndarray, k: int,
                     valid: jnp.ndarray | None = None):
@@ -49,9 +65,6 @@ def l2_topk_rowwise(queries: jnp.ndarray, bases: jnp.ndarray, k: int,
     engine, where every query reranks the raw vectors of its private pool
     (the shared-base Pallas kernel above cannot express per-row bases).
     """
-    diff = bases.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
-    d = jnp.sum(diff * diff, axis=-1)                      # (B, C)
-    if valid is not None:
-        d = jnp.where(valid, d, jnp.inf)
+    d = sq_l2_rowwise(queries, bases, valid)               # (B, C)
     neg, idx = jax.lax.top_k(-d, k)
     return -neg, idx

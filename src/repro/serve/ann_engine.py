@@ -15,6 +15,9 @@ lifetime of the server:
   a vectorized insert-sort: concatenate `(B, L + R)`, stable-sort by id to
   drop duplicates (the incumbent pool entry wins, preserving its expanded
   flag), then stable-sort by distance and truncate to L.  No Python pool.
+  The merge primitive lives in `repro.build.pool.pool_merge`; the
+  batched construction frontier (`repro.build.frontier`) uses the same
+  (B, L) pool shape with a leaner seen-mask-based merge.
 - **Beam expansion** runs a fixed number of iterations (`max_hops`); each
   iteration pops the best unexpanded candidate of every row, gathers its
   padded adjacency row `(B, R)`, and ADC-scores the gathered neighbor codes
@@ -40,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.build.pool import pool_merge as _pool_merge
 from repro.core.pq import adc_tables as _adc_tables
 from repro.kernels.l2_topk.ops import l2_topk_rowwise
 from repro.kernels.pq_adc.ops import pq_adc
@@ -59,42 +63,6 @@ def _adc_gather(tables: jnp.ndarray, cand_codes: jnp.ndarray) -> jnp.ndarray:
     """Per-row ADC: tables (B, M, K), cand_codes (B, R, M) -> (B, R)."""
     g = jnp.take_along_axis(tables[:, None], cand_codes[..., None], axis=3)
     return g[..., 0].sum(-1)
-
-
-def _pool_merge(pool_ids, pool_d, pool_exp, cand_ids, cand_d, l: int):
-    """Vectorized insert-sort of candidates into the sorted (B, L) pool.
-
-    Duplicate ids collapse to the incumbent pool entry (stable sort by id
-    keeps the lower concat index first, and the pool occupies indices
-    0..L-1), so expanded flags survive re-insertion and a node is not
-    re-expanded *while it stays in the pool*.  A node evicted past L loses
-    its flag; if the beam later re-encounters it as a best unexpanded
-    candidate it is re-expanded -- the price of a fixed-shape pool vs the
-    host engine's unbounded `explored` set.  In practice eviction means L
-    closer candidates exist, so re-expansion is rare and costs only a hop,
-    never correctness.  Returns the new (ids, dists, expanded), sorted
-    ascending by dist with invalid entries (+inf, id=-1) at the tail.
-    """
-    sentinel = jnp.iinfo(jnp.int32).max
-    ids = jnp.concatenate([pool_ids, cand_ids.astype(jnp.int32)], axis=1)
-    d = jnp.concatenate([pool_d, cand_d], axis=1)
-    exp = jnp.concatenate(
-        [pool_exp, jnp.zeros(cand_ids.shape, bool)], axis=1)
-    d = jnp.where(ids < 0, jnp.inf, d)
-    key = jnp.where(ids < 0, sentinel, ids)
-    order = jnp.argsort(key, axis=1, stable=True)
-    sid = jnp.take_along_axis(key, order, axis=1)
-    ids_s = jnp.take_along_axis(ids, order, axis=1)
-    d_s = jnp.take_along_axis(d, order, axis=1)
-    exp_s = jnp.take_along_axis(exp, order, axis=1)
-    dup = jnp.pad(sid[:, 1:] == sid[:, :-1], ((0, 0), (1, 0)))
-    ids_s = jnp.where(dup, -1, ids_s)
-    d_s = jnp.where(dup, jnp.inf, d_s)
-    exp_s = jnp.where(dup, False, exp_s)
-    o2 = jnp.argsort(d_s, axis=1, stable=True)[:, :l]
-    return (jnp.take_along_axis(ids_s, o2, axis=1),
-            jnp.take_along_axis(d_s, o2, axis=1),
-            jnp.take_along_axis(exp_s, o2, axis=1))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "l", "max_hops", "n_entry",

@@ -7,6 +7,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
 from hypothesis import given, settings, strategies as st
 
 from repro.core.block_assign import (block_members, bnf_blocks, random_blocks,
+                                     undirected_neighbor_lists,
                                      uniform_blocks)
 from repro.core.bmrng import build_bmrng, io_length, monotonic_io_path
 from repro.core.distances import exact_knn, knn_graph, pairwise_sq_l2

@@ -1,0 +1,87 @@
+"""Plain-pytest regressions for the PR-5 satellite fixes (kept out of
+test_core_graphs.py, whose module-level hypothesis importorskip would
+silently skip them in environments without dev dependencies)."""
+import numpy as np
+
+from repro.core.block_assign import bnf_blocks, undirected_neighbor_lists
+from repro.core.distances import knn_graph, medoid
+
+
+def _points(n, d, seed):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def test_undirected_view_dedupes_symmetric_edges():
+    """Regression: a symmetric edge (u->v and v->u both stored) used to
+    insert each endpoint twice, doubling its block-neighbor frequency."""
+    adj = np.array([[1, -1],     # 0->1
+                    [0, -1],     # 1->0  (symmetric with the above)
+                    [0, 1],      # 2->0, 2->1 (one-way)
+                    [-1, -1]], np.int32)
+    und = undirected_neighbor_lists(adj)
+    assert sorted(und[0]) == [1, 2]
+    assert sorted(und[1]) == [0, 2]
+    assert sorted(und[2]) == [0, 1]
+    assert und[3] == []
+    for row in und:
+        assert len(set(row)) == len(row), "no duplicate neighbors"
+
+
+def test_bnf_blocks_symmetrization_is_noop():
+    """The undirected view of a graph equals that of its explicit
+    symmetrization, so BNF must produce the same assignment for both --
+    the old double-counting inflated frequencies on the symmetrized copy."""
+    x = _points(80, 4, 2)
+    adj = knn_graph(x, 4)
+    sym = [set(adj[u][adj[u] >= 0].tolist()) for u in range(80)]
+    for u in range(80):
+        for v in list(sym[u]):
+            sym[v].add(u)
+    width = max(len(s) for s in sym)
+    full = -np.ones((80, width), np.int32)
+    for u, s in enumerate(sym):
+        full[u, : len(s)] = sorted(s)
+    assert np.array_equal(bnf_blocks(adj, 8, seed=3),
+                          bnf_blocks(full, 8, seed=3))
+    counts = np.bincount(bnf_blocks(full, 8, seed=3))
+    assert counts.max() <= 8
+
+
+def test_knn_graph_pads_with_negative_one():
+    """Regression: short rows used to be padded by repeating earlier
+    entries, creating duplicate edges downstream; they must be -1 now.
+    (k >= n is the only reachable short-row case -- and it used to crash
+    in top_k before the clamp.)"""
+    x = np.zeros((4, 3), np.float32)
+    x[3] = 1.0
+    adj = knn_graph(x, 5)            # k exceeds n-1: rows have 3 entries
+    assert adj.shape == (4, 5)
+    for i in range(4):
+        row = adj[i]
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), "no duplicate edges"
+        assert i not in valid.tolist()
+        assert len(valid) == 3
+    assert (adj < 0).any(), "short rows must be -1 padded"
+    # degenerate duplicates at n > k: rows stay full, distinct, self-free
+    y = np.zeros((8, 3), np.float32)
+    adj2 = knn_graph(y, 5)
+    for i in range(8):
+        row = adj2[i]
+        assert (row >= 0).all()
+        assert len(set(row.tolist())) == 5 and i not in row.tolist()
+
+
+def test_medoid_sampled_approximation():
+    x = _points(500, 6, 21)
+    exact = medoid(x, sample=None)
+    assert exact == int(np.argmin(((x - x.mean(0)) ** 2).sum(1)))
+    # sampled mode: argmin restricted to the seeded candidate set
+    approx = medoid(x, sample=64, seed=9)
+    cand = np.random.default_rng(9).choice(500, size=64, replace=False)
+    d = ((x[cand] - x.mean(0)) ** 2).sum(1)
+    assert approx == int(cand[np.argmin(d)])
+    # small n: sampling is a no-op
+    assert medoid(x, sample=1000, seed=9) == exact
+
+
