@@ -1,5 +1,16 @@
 """Kernel micro-benchmarks (CPU wall time of the jnp reference backend;
-the Pallas TPU path is validated in interpret mode by tests/test_kernels)."""
+the Pallas TPU path is validated in interpret mode by tests/test_kernels
+and tests/test_beam_fused).
+
+The beam_fused sweep pits the fused hop loop against the serve engine's
+historical unfused scan (per-hop pop + gather + pq_adc_rowwise +
+concat-sort pool_merge) at the serving shape B=64, L=64, R=32 -- both
+jit'd XLA CPU programs over the same corpus, bit-identical pools, so the
+speedup is pure merge/loop structure.  REPRO_BENCH_KERN_N sizes the
+corpus (graph rows); REPRO_BENCH_KERN_HOPS the hop count.
+"""
+import functools
+import os
 import time
 
 import jax
@@ -7,9 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import common
+from repro.build.pool import pool_merge
+from repro.kernels.beam_fused import beam_hops
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.l2_topk import l2_topk
-from repro.kernels.pq_adc import pq_adc
+from repro.kernels.pq_adc import pq_adc, pq_adc_rowwise
+
+KERN_N = int(os.environ.get("REPRO_BENCH_KERN_N", "20000"))
+KERN_HOPS = int(os.environ.get("REPRO_BENCH_KERN_HOPS", "16"))
 
 
 def _time(fn, *args, reps=5):
@@ -44,6 +60,73 @@ def run() -> None:
                qq, kk, vv, lens)
     common.emit("kernel.flash_decode.b4s8192", round(us, 1),
                 f"gbps={(kk.nbytes+vv.nbytes)/us/1e3:.1f}")
+
+    ccodes = jnp.asarray(rng.integers(0, 256, (8, 4096, 16)), jnp.int32)
+    us = _time(lambda t, c: pq_adc_rowwise(t, c, backend="ref"),
+               tables, ccodes)
+    common.emit("kernel.pq_adc_rowwise.b8xr4096", round(us, 1),
+                f"gflops={8*4096*16*2/us/1e3:.1f}")
+
+    _beam_sweep(rng)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def _unfused_hops(adj, pool_ids, pool_d, pool_exp, max_hops, tables, codes):
+    """The serve engine's unfused hop scan (its non-fused backend path),
+    inlined here as the baseline the fused kernel is measured against."""
+    b, l = pool_ids.shape
+    rows = jnp.arange(b)
+
+    def step(state, _):
+        pool_ids, pool_d, pool_exp, hops = state
+        frontier_d = jnp.where(pool_exp | (pool_ids < 0), jnp.inf, pool_d)
+        j = jnp.argmin(frontier_d, axis=1)
+        has = jnp.isfinite(frontier_d[rows, j])
+        v = jnp.where(has, pool_ids[rows, j], 0)
+        pool_exp = pool_exp.at[rows, j].set(pool_exp[rows, j] | has)
+        nbrs = jnp.where(has[:, None], adj[v], -1)
+        nd = pq_adc_rowwise(tables, codes[jnp.clip(nbrs, 0)], backend="ref")
+        nd = jnp.where(nbrs >= 0, nd, jnp.inf)
+        pool_ids, pool_d, pool_exp = pool_merge(
+            pool_ids, pool_d, pool_exp, nbrs, nd, l)
+        return (pool_ids, pool_d, pool_exp, hops + has), None
+
+    (pool_ids, pool_d, pool_exp, hops), _ = jax.lax.scan(
+        step, (pool_ids, pool_d, pool_exp, jnp.zeros(b, jnp.int32)),
+        None, length=max_hops)
+    return pool_ids, pool_d, pool_exp, hops
+
+
+def _beam_sweep(rng) -> None:
+    """Fused vs unfused hop loop at the serving shape B=64, L=64, R=32."""
+    n, r, m, k = KERN_N, 32, 16, 256
+    b, l, hops = 64, 64, KERN_HOPS
+    adj = jnp.asarray(rng.integers(0, n, (n, r)), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.int32)
+    tables = jnp.asarray(rng.random((b, m, k)), jnp.float32)
+    seeds = np.sort(rng.choice(n, (b, 4), replace=False).astype(np.int32), 1)
+    pool_ids = jnp.full((b, l), -1, jnp.int32).at[:, :4].set(seeds)
+    pool_d = jnp.full((b, l), jnp.inf, jnp.float32).at[:, :4].set(
+        jnp.asarray(np.sort(rng.random((b, 4)), axis=1), jnp.float32))
+    pool_exp = jnp.zeros((b, l), bool)
+
+    u = _time(lambda *a: _unfused_hops(*a, hops, tables, codes),
+              adj, pool_ids, pool_d, pool_exp)
+    f = _time(lambda *a: beam_hops(*a, hops, tables=tables, codes=codes,
+                                   backend="ref"),
+              adj, pool_ids, pool_d, pool_exp)
+    ou = _unfused_hops(adj, pool_ids, pool_d, pool_exp, hops, tables, codes)
+    of = beam_hops(adj, pool_ids, pool_d, pool_exp, hops,
+                   tables=tables, codes=codes, backend="ref")
+    match = all(bool(jnp.array_equal(x, y)) for x, y in zip(ou[:2], of[:2]))
+    hps = b * hops / u * 1e6
+    common.emit("kernel.beam_unfused.b64l64r32.hop_us", round(u / hops, 1),
+                f"hops_per_s={hps:.0f}")
+    hps = b * hops / f * 1e6
+    common.emit("kernel.beam_fused.b64l64r32.hop_us", round(f / hops, 1),
+                f"hops_per_s={hps:.0f}")
+    common.emit("kernel.beam_fused.b64l64r32.speedup", round(u / f, 2),
+                f"pools_identical={match}")
 
 
 if __name__ == "__main__":

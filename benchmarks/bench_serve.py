@@ -1,9 +1,15 @@
 """Serving throughput: batched fixed-shape engine vs the host query loop.
 
 Rows: host-engine wall-clock qps, then the batched engine's qps at batch
-sizes {1, 8, 64, 256} (same index, same search budget l), plus recall of
-both so the speedup is apples-to-apples.  The acceptance bar for the
-serving layer is batched-qps(B=64) > host-qps.
+sizes {1, 8, 64, 256} (same index, same search budget l) with p50/p99
+per-call latency, plus recall of both so the speedup is apples-to-apples.
+The acceptance bar for the serving layer is batched-qps(B=64) > host-qps.
+
+The tail isolates the hop loop: per-hop latency of the unfused scan vs
+the fused beam kernel (`EngineConfig(backend="fused")`; auto-resolves to
+the jnp fused oracle on CPU, the Pallas program on TPU) by differencing
+engine wall time across two hop budgets -- entry selection, re-rank and
+dispatch overheads subtract out.
 """
 import time
 
@@ -16,6 +22,7 @@ from repro.serve import BatchedANNEngine, EngineConfig
 K = 10
 L = 48
 BATCHES = (1, 8, 64, 256)
+HOP_SPLIT = (8, 32)        # hop budgets differenced for per-hop timing
 
 
 def run() -> None:
@@ -39,14 +46,39 @@ def run() -> None:
     for b in BATCHES:
         q = np.tile(ds.queries, (-(-b // nq), 1))[:b]
         eng.search_batch(q, K)                       # compile + warm
-        reps = max(1, 256 // b)
-        t0 = time.perf_counter()
-        for _ in range(reps):
+        reps = max(4, 256 // b)
+        lat = np.empty(reps)
+        for i in range(reps):
+            t0 = time.perf_counter()
             eng.search_batch(q, K)
-        dt = time.perf_counter() - t0
-        qps = b * reps / dt
+            lat[i] = time.perf_counter() - t0
+        qps = b * reps / lat.sum()
+        p50, p99 = np.percentile(lat, [50, 99]) * 1e3
         common.emit(f"serve.batched.b{b}.qps", round(qps, 1),
+                    f"p50_ms={p50:.2f} p99_ms={p99:.2f} "
                     f"speedup_vs_host={qps / host_qps:.2f}x")
+
+    # --- per-hop latency, unfused scan vs fused beam kernel (B=64)
+    q = np.tile(ds.queries, (-(-64 // nq), 1))[:64]
+    per_hop = {}
+    for backend in ("ref", "fused"):
+        times = []
+        for hops in HOP_SPLIT:
+            e = BatchedANNEngine.from_index(
+                idx, EngineConfig(l=L, max_hops=hops, backend=backend))
+            e.search_batch(q, K)                     # compile + warm
+            reps = 8
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                e.search_batch(q, K)
+            times.append((time.perf_counter() - t0) / reps)
+        per_hop[backend] = ((times[1] - times[0])
+                            / (HOP_SPLIT[1] - HOP_SPLIT[0]) * 1e6)
+        common.emit(f"serve.{backend}.b64.hop_us",
+                    round(per_hop[backend], 1), f"l={L}")
+    common.emit("serve.fused.b64.hop_speedup",
+                round(per_hop["ref"] / per_hop["fused"], 2),
+                "unfused_scan_vs_fused_kernel")
 
 
 if __name__ == "__main__":

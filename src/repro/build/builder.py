@@ -36,6 +36,8 @@ from .knn import clustered_knn_graph
 from .prune import robust_prune_batch
 
 BACKENDS = ("host", "batched")
+FRONTIER_BACKENDS = ("batched", "fused", "fused_pallas", "fused_interpret",
+                     "fused_ref")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,11 +48,20 @@ class BuildConfig:
     beam_width: int = 8          # frontier expansions per hop
     max_hops: int | None = None  # frontier hops (default: ~ef/beam_width)
     knn_mode: str = "clustered"  # batched NSG kNN stage: "clustered"|"exact"
+    # candidate-beam implementation for the batched backend: "batched"
+    # (seen-mask beam) or "fused"/"fused_pallas"/"fused_interpret"/
+    # "fused_ref" (the serve engine's fused hop kernel at width 1,
+    # repro.kernels.beam_fused; beam_width is then ignored)
+    frontier_backend: str = "batched"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {self.backend!r}")
+        if self.frontier_backend not in FRONTIER_BACKENDS:
+            raise ValueError(
+                f"frontier_backend must be one of {FRONTIER_BACKENDS}, "
+                f"got {self.frontier_backend!r}")
         if self.knn_mode not in ("clustered", "exact"):
             raise ValueError(f"knn_mode must be 'clustered' or 'exact', "
                              f"got {self.knn_mode!r}")
@@ -113,7 +124,8 @@ class GraphBuilder:
                     x, adj, [med], nodes, ef=l_build,
                     max_hops=self.config.max_hops, batch=bs,
                     width=self.config.beam_width,
-                    device_arrays=(xj, n2, jnp.asarray(adj, jnp.int32)))
+                    device_arrays=(xj, n2, jnp.asarray(adj, jnp.int32)),
+                    backend=self.config.frontier_backend)
                 cand = np.concatenate([pool_ids, adj[nodes]], axis=1)
                 kept = self._prune(xj, nodes, cand, r=r, alpha=a)
                 for bi, p in enumerate(nodes.tolist()):
@@ -172,7 +184,8 @@ class GraphBuilder:
             x, knn, [med], np.arange(n), ef=l_build,
             max_hops=self.config.max_hops, batch=self.config.batch_size,
             width=self.config.beam_width,
-            device_arrays=(xj, n2, jnp.asarray(knn, jnp.int32)))
+            device_arrays=(xj, n2, jnp.asarray(knn, jnp.int32)),
+            backend=self.config.frontier_backend)
         cand = np.concatenate([pool_ids, knn], axis=1)
         kept = self._prune(xj, np.arange(n), cand, r=r, alpha=1.0)
         adj = host._pad_adj([row[row >= 0] for row in kept], r)

@@ -28,6 +28,17 @@ Termination differs from the host loop: the host stops when the best heap
 candidate exceeds the worst of `ef` expanded results, the batch runs a
 fixed hop count so every row's shape is static.  Like the host, the pool
 it returns is the *expanded* (visited) set, ascending by distance.
+
+`frontier_pools(backend="fused*")` instead runs the hops through the
+fused beam-hop kernel (`repro.kernels.beam_fused`, exact-L2 mode) -- the
+same VMEM-resident program the serving engine uses, at width 1 with a
+`pool_merge`-invariant pool instead of the seen-mask merge.  Its per-hop
+frontier trace *is* the visited set.  The pool semantics differ slightly
+(the ranked merge dedupes against the live pool only, where the seen mask
+dedupes against everything ever proposed), so the two backends agree
+exactly when the pool is large enough that nothing useful is evicted --
+the regime the 1.5x pool slack targets -- and remain recall-equivalent
+otherwise.
 """
 from __future__ import annotations
 
@@ -37,7 +48,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.beam_fused.ops import beam_hops
+
 from .chunking import map_chunks
+from .pool import pool_merge
+
+# frontier_pools backend -> the beam_hops backend the fused path pins
+_FUSED = {"fused": "auto", "fused_pallas": "pallas",
+          "fused_interpret": "interpret", "fused_ref": "ref"}
 
 
 @functools.partial(jax.jit, static_argnames=("ef", "max_hops", "width"))
@@ -127,6 +145,40 @@ def _frontier_batch(x, n2, adj, entries, queries,
             jnp.take_along_axis(vis_d, o, axis=1))
 
 
+@functools.partial(jax.jit, static_argnames=("ef", "max_hops", "backend"))
+def _frontier_batch_fused(x, n2, adj, entries, queries,
+                          ef: int, max_hops: int, backend: str):
+    """Width-1 beam for a query batch through the fused hop kernel.
+
+    Same operands and return contract as `_frontier_batch` with width=1:
+    seed a (B, pl) `pool_merge`-invariant pool with the shared entries,
+    run `max_hops` fused hops (`repro.kernels.beam_fused`, exact-L2
+    scoring -- bit-identical to `_frontier_batch`'s `score`), and return
+    the per-hop frontier trace stable-sorted ascending by distance.
+    """
+    b = queries.shape[0]
+    q = queries.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1)
+    pl = ef + ef // 2                                    # same beam slack
+    seed_ids = jnp.broadcast_to(entries[None, :],
+                                (b, entries.shape[0])).astype(jnp.int32)
+    vecs = x[jnp.clip(seed_ids, 0)]
+    sd = (n2[jnp.clip(seed_ids, 0)]
+          - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q) + qn[:, None])
+    sd = jnp.where(seed_ids >= 0, jnp.maximum(sd, 0.0), jnp.inf)
+    pool_ids = jnp.full((b, pl), -1, jnp.int32)
+    pool_d = jnp.full((b, pl), jnp.inf, jnp.float32)
+    pool_exp = jnp.zeros((b, pl), bool)
+    pool_ids, pool_d, pool_exp = pool_merge(
+        pool_ids, pool_d, pool_exp, seed_ids, sd, pl)
+    _, _, _, _, tid, td, _, _ = beam_hops(
+        adj, pool_ids, pool_d, pool_exp, max_hops,
+        x=x, n2=n2, queries=q, backend=backend)
+    o = jnp.argsort(td, axis=1, stable=True)
+    return (jnp.take_along_axis(tid, o, axis=1),
+            jnp.take_along_axis(td, o, axis=1))
+
+
 def default_hops(ef: int, width: int) -> int:
     """Hop count giving ~ef + 2*width expansions -- the host loop expands
     ~ef nodes before its bound check fires."""
@@ -143,6 +195,7 @@ def frontier_pools(
     batch: int = 256,
     width: int = 8,
     device_arrays: tuple | None = None,
+    backend: str = "batched",
 ) -> tuple[np.ndarray, np.ndarray]:
     """Candidate pools for a set of build nodes, chunked over fixed batches.
 
@@ -154,10 +207,18 @@ def frontier_pools(
     `device_arrays` optionally carries preloaded `(x, n2, adj)` jnp arrays
     so repeated calls (the Vamana batch loop) skip the host->device upload
     of x.
+
+    backend: "batched" (the seen-mask beam above) or one of
+    "fused"/"fused_pallas"/"fused_interpret"/"fused_ref" -- the fused
+    beam-hop kernel at width 1 (`width` is ignored; hop count defaults to
+    the width-1 `default_hops`, so pass `max_hops` to bound it).
     """
+    if backend != "batched" and backend not in _FUSED:
+        raise ValueError(f"frontier backend must be 'batched' or one of "
+                         f"{sorted(_FUSED)}, got {backend!r}")
     node_ids = np.asarray(node_ids, np.int64)
     entries = np.asarray(entries, np.int32).ravel()
-    width = max(1, min(width, ef))
+    width = max(1, min(width, ef)) if backend == "batched" else 1
     if max_hops is None:
         max_hops = default_hops(ef, width)
     if device_arrays is not None:
@@ -177,9 +238,15 @@ def frontier_pools(
         qs = x[chunk]
         if pad:
             qs = np.concatenate([qs, np.zeros((pad, x.shape[1]), x.dtype)], 0)
-        ids, d = _frontier_batch(xj, n2, adjj, ej,
-                                 jnp.asarray(qs, jnp.float32),
-                                 ef=ef, max_hops=max_hops, width=width)
+        if backend == "batched":
+            ids, d = _frontier_batch(xj, n2, adjj, ej,
+                                     jnp.asarray(qs, jnp.float32),
+                                     ef=ef, max_hops=max_hops, width=width)
+        else:
+            ids, d = _frontier_batch_fused(xj, n2, adjj, ej,
+                                           jnp.asarray(qs, jnp.float32),
+                                           ef=ef, max_hops=max_hops,
+                                           backend=_FUSED[backend])
         out_ids[s : s + len(chunk)] = np.asarray(ids)[: len(chunk)]
         out_d[s : s + len(chunk)] = np.asarray(d)[: len(chunk)]
 

@@ -7,6 +7,16 @@ of the process.  The construction frontier (`repro.build.frontier`) keeps
 the same pool *shape* but inlines a leaner merge (single top_k; its
 (B, N) seen mask already guarantees candidates are distinct and unseen,
 which the serve path cannot assume).
+
+`pool_merge_ranked` is the sort-free formulation of the same merge: the
+pool is already sorted, so each entry's post-merge slot is its *merge
+rank* (old index + number of strictly-closer candidates; candidates rank
+after every pool tie, preserving the stable concat order).  It is
+bit-identical to `pool_merge` (tests/test_beam_fused.py sweeps dups,
+ties, all-padded rows) but replaces the two (B, L+R) stable argsorts
+with elementwise rank comparisons and one scatter -- the form the fused
+Pallas serve kernel (`repro.kernels.beam_fused`) inlines as one-hot
+matmuls, and measurably faster under XLA on CPU as well.
 """
 from __future__ import annotations
 
@@ -47,3 +57,73 @@ def pool_merge(pool_ids, pool_d, pool_exp, cand_ids, cand_d, l: int):
     return (jnp.take_along_axis(ids_s, o2, axis=1),
             jnp.take_along_axis(d_s, o2, axis=1),
             jnp.take_along_axis(exp_s, o2, axis=1))
+
+
+def pool_merge_ranked(pool_ids, pool_d, pool_exp, cand_ids, cand_d, l: int):
+    """Sort-free `pool_merge`: merge ranks instead of two stable argsorts.
+
+    Requires the invariant every `pool_merge`/`pool_merge_ranked` output
+    satisfies (and the serve/build loops maintain): the pool is sorted
+    ascending by (distance, id) -- `pool_merge`'s id-sort-then-dist-sort
+    orders equal-distance entries by ascending id -- valid ids are
+    unique, and invalid entries are exactly (id=-1, d=+inf, exp=False).
+    Candidates carry no such contract: they may duplicate the pool, each
+    other, or be -1 padded.
+
+    Equivalence to the concat-sort, piece by piece: a candidate
+    duplicating a pool id is dropped (the incumbent wins, keeping its
+    expanded flag); a candidate duplicating an earlier candidate is
+    dropped; surviving entries land at their merge rank under the same
+    (distance, id) lexicographic key -- old index + #{strictly smaller
+    candidates} for pool entries, #{pool entries with key at most theirs}
+    + #{candidates ranked earlier} for candidates.  Invalid entries all
+    carry the identical key (+inf, -1, False), so their mutual order is
+    immaterial; ranks >= l fall off the end.  Returns (ids, dists,
+    expanded) of shape (B, l)."""
+    sentinel = jnp.iinfo(jnp.int32).max
+    pids = pool_ids.astype(jnp.int32)
+    cids = cand_ids.astype(jnp.int32)
+    cd = jnp.where(cids < 0, jnp.inf, cand_d)
+
+    dup_pool = ((pids[:, None, :] == cids[:, :, None])
+                & (cids[:, :, None] >= 0)).any(axis=2)          # (B, R)
+    j = jnp.arange(cids.shape[1])
+    earlier = j[None, :, None] > j[None, None, :]               # j' < j
+    dup_cand = ((cids[:, :, None] == cids[:, None, :])
+                & (cids[:, :, None] >= 0) & earlier).any(axis=2)
+    valid = (cids >= 0) & ~dup_pool & ~dup_cand
+    cd = jnp.where(valid, cd, jnp.inf)
+    cids = jnp.where(valid, cids, -1)
+
+    # lexicographic (dist, id) merge ranks; -1 ids rank as id=+sentinel
+    pkid = jnp.where(pids < 0, sentinel, pids)
+    ckid = jnp.where(cids < 0, sentinel, cids)
+    c_lt_p = ((cd[:, :, None] < pool_d[:, None, :])             # (B, R, L)
+              | ((cd[:, :, None] == pool_d[:, None, :])
+                 & (ckid[:, :, None] < pkid[:, None, :])))
+    pos_p = jnp.arange(pids.shape[1])[None, :] + c_lt_p.sum(axis=1)
+    # pool_i lex<= cand_j  <=>  not (cand_j lex< pool_i): the keys form a
+    # total order, so the <=-count is the negated transpose of c_lt_p
+    c_lt_c = ((cd[:, :, None] > cd[:, None, :])                 # cd_j' < cd_j
+              | ((cd[:, :, None] == cd[:, None, :])
+                 & (ckid[:, :, None] > ckid[:, None, :]))
+              | ((cd[:, :, None] == cd[:, None, :])
+                 & (ckid[:, :, None] == ckid[:, None, :]) & earlier))
+    pos_c = (~c_lt_p).sum(axis=2) + c_lt_c.sum(axis=2)
+
+    # merge ranks of surviving entries are distinct, so each output slot
+    # has at most one writer: place by slot-match sums (XLA CPU scatters
+    # serialize; this stays elementwise, and is the exact form the fused
+    # Pallas kernel uses).  Ranks >= l match no slot and fall away.
+    slot = jnp.arange(l)
+    mask_p = pos_p[:, :, None] == slot                          # (B, L, l)
+    mask_c = pos_c[:, :, None] == slot                          # (B, R, l)
+    ids_o = (jnp.where(mask_p, pids[:, :, None], 0).sum(axis=1)
+             + jnp.where(mask_c, cids[:, :, None], 0).sum(axis=1))
+    d_o = (jnp.where(mask_p, pool_d[:, :, None], 0).sum(axis=1)
+           + jnp.where(mask_c, cd[:, :, None], 0).sum(axis=1))
+    wrote = mask_p.any(axis=1) | mask_c.any(axis=1)             # (B, l)
+    exp_o = (mask_p & pool_exp[:, :, None]).any(axis=1)
+    return (jnp.where(wrote, ids_o, -1),
+            jnp.where(wrote, d_o, jnp.inf),
+            exp_o)

@@ -1,0 +1,2 @@
+from .ops import beam_hops  # noqa: F401
+from .ref import beam_hops_ref  # noqa: F401

@@ -1,0 +1,299 @@
+"""Pallas TPU kernel: the fused beam-hop serve loop, VMEM-resident.
+
+One grid step owns a TB-row query tile and runs the *entire* hop loop --
+frontier select, adjacency gather, neighbor scoring, pool merge -- as a
+`fori_loop` whose (TB, L) pool state never leaves VMEM.  The unfused
+engine round-trips pool/frontier arrays through HBM between four XLA
+programs per hop; here one program launch serves all `max_hops` hops.
+
+TPU adaptation of each stage (no fast gather on TPU, so every gather is
+a one-hot contraction -- the `pq_adc` trick applied throughout):
+
+- **frontier select**: the pool is kept sorted, so the pop is the first
+  unexpanded valid entry -- a masked iota min + one-hot readout, no
+  argsort.
+- **adjacency / code / vector gather**: rows are pulled from the
+  VMEM-resident corpus arrays by one-hot @ matrix MXU contractions,
+  chunked over N (`n_chunk`) so the one-hot tile, not the corpus, bounds
+  the live footprint.
+- **scoring**: mode="adc" inlines the `pq_adc_rowwise` one-hot LUT
+  lookup against the tile's private (TB, M, K) tables; mode="l2" is the
+  build frontier's dot-form exact distance vs (N, D+1) vectors carrying
+  their squared norms in the last column.
+- **merge**: `pool_merge_ranked` verbatim -- lexicographic (dist, id)
+  merge ranks from elementwise comparisons, then a slot-match scatter
+  (rank == slot-iota one-hots); no sort anywhere in the hop.
+
+Every hop also records its frontier pick into a (TB, max_hops) trace
+(the build frontier's visited set), and the program ends by emitting the
+*next* frontier pick and a done mask so callers can chain hop programs.
+
+VMEM budget per grid step: the corpus blocks N*(R + M + 1)*4 bytes (adc)
+or N*(R + D + 1 + 1)*4 (l2) plus the (TB*R, n_chunk) gather one-hot and
+(TB, R|L, L) merge tensors -- a 100k-node shard at R=32, M=16 is ~20 MB,
+so shard via `serve.frontend.ShardedFrontend` before N outgrows VMEM
+(streaming the corpus through HBM DMA is the documented next step).
+Ids and flags travel as exact f32 (N < 2^24) so every stage stays on
+the VPU/MXU datapath.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SENT = float(2 ** 31)   # f32 id sentinel: -1 ids rank last, like pool_merge
+
+
+def _gather_rows(ids_col, mat, n: int, n_chunk: int):
+    """One-hot gather of `mat` rows: ids_col (S, 1) exact-int f32 with all
+    values in [0, n); mat (N, C) f32.  Returns (S, C).  Chunked over N so
+    only an (S, n_chunk) one-hot tile is live per iteration; each id
+    matches exactly one column of exactly one chunk."""
+    s = ids_col.shape[0]
+    c = mat.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.float32, (s, n_chunk), 1)
+
+    def body(ci, acc):
+        off = (ci * n_chunk).astype(jnp.float32)
+        onehot = (col + off == ids_col).astype(jnp.float32)
+        chunk = jax.lax.dynamic_slice_in_dim(mat, ci * n_chunk, n_chunk, 0)
+        return acc + jax.lax.dot_general(
+            onehot, chunk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.lax.fori_loop(0, n // n_chunk, body,
+                             jnp.zeros((s, c), jnp.float32))
+
+
+def _merge_ranked(pids, pd, pexp, cids, cd, tb: int, l: int, r: int):
+    """In-kernel `pool_merge_ranked` (see repro.build.pool), f32 ids."""
+    cd = jnp.where(cids < 0.0, jnp.inf, cd)
+    dup_pool = jnp.any((pids[:, None, :] == cids[:, :, None])
+                       & (cids[:, :, None] >= 0.0), axis=2)
+    earlier = (jax.lax.broadcasted_iota(jnp.int32, (tb, r, r), 1)
+               > jax.lax.broadcasted_iota(jnp.int32, (tb, r, r), 2))
+    dup_cand = jnp.any((cids[:, :, None] == cids[:, None, :])
+                       & (cids[:, :, None] >= 0.0) & earlier, axis=2)
+    valid = (cids >= 0.0) & ~dup_pool & ~dup_cand
+    cd = jnp.where(valid, cd, jnp.inf)
+    cids = jnp.where(valid, cids, -1.0)
+
+    pkid = jnp.where(pids < 0.0, _SENT, pids)
+    ckid = jnp.where(cids < 0.0, _SENT, cids)
+    c_lt_p = ((cd[:, :, None] < pd[:, None, :])
+              | ((cd[:, :, None] == pd[:, None, :])
+                 & (ckid[:, :, None] < pkid[:, None, :])))
+    pos_p = (jax.lax.broadcasted_iota(jnp.int32, (tb, l), 1)
+             + c_lt_p.astype(jnp.int32).sum(axis=1))
+    p_le_c = ((pd[:, :, None] < cd[:, None, :])
+              | ((pd[:, :, None] == cd[:, None, :])
+                 & (pkid[:, :, None] <= ckid[:, None, :])))
+    ctie = cd[:, :, None] == cd[:, None, :]
+    c_lt_c = ((cd[:, :, None] > cd[:, None, :])
+              | (ctie & (ckid[:, :, None] > ckid[:, None, :]))
+              | (ctie & (ckid[:, :, None] == ckid[:, None, :]) & earlier))
+    pos_c = (p_le_c.astype(jnp.int32).sum(axis=1)
+             + c_lt_c.astype(jnp.int32).sum(axis=2))
+
+    # slot-match scatter: rank >= l simply matches no slot; every slot
+    # < l has exactly one owning source (merge ranks are a bijection)
+    mp = pos_p[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tb, l, l), 2)
+    mc = pos_c[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tb, r, l), 2)
+    out_ids = (jnp.where(mp, pids[:, :, None], 0.0).sum(axis=1)
+               + jnp.where(mc, cids[:, :, None], 0.0).sum(axis=1))
+    out_d = (jnp.where(mp, pd[:, :, None], 0.0).sum(axis=1)
+             + jnp.where(mc, cd[:, :, None], 0.0).sum(axis=1))
+    out_exp = jnp.where(mp, pexp[:, :, None], 0.0).sum(axis=1)
+    return out_ids, out_d, out_exp
+
+
+def _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
+              *, max_hops: int, n: int, n_chunk: int):
+    """Shared hop loop; `score(nbrs, valid) -> (TB, R)` closes over the
+    mode-specific operands.  Writes the eight output refs in `outs`."""
+    (oi_ref, od_ref, oe_ref, oh_ref, oti_ref, otd_ref,
+     onx_ref, odn_ref) = outs
+    tb, l = ids_ref.shape
+    r = adj_ref.shape[1]
+    adj_f = adj_ref[...]
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (tb, l), 1)
+    iota_h = jax.lax.broadcasted_iota(jnp.int32, (tb, max_hops), 1)
+
+    def pick(ids, d, exp):
+        fm = (exp == 0.0) & (ids >= 0.0) & (d < jnp.inf)
+        jmin = jnp.min(jnp.where(fm, iota_l, l), axis=1)        # (TB,)
+        has = jmin < l
+        onej = iota_l == jmin[:, None]                          # all-0 if !has
+        v = jnp.where(onej, ids, 0.0).sum(axis=1)
+        vd = jnp.where(has, jnp.where(onej, d, 0.0).sum(axis=1), jnp.inf)
+        return onej, has, v, vd
+
+    def hop(h, carry):
+        ids, d, exp, hops, tid, td = carry
+        onej, has, v, vd = pick(ids, d, exp)
+        exp = jnp.maximum(exp, onej.astype(jnp.float32))
+        nbrs = _gather_rows(v[:, None], adj_f, n, n_chunk)      # (TB, R)
+        nbrs = jnp.where(has[:, None], nbrs, -1.0)
+        nd = score(nbrs, nbrs >= 0.0)
+        ids, d, exp = _merge_ranked(ids, d, exp, nbrs, nd, tb, l, r)
+        hops = hops + has.astype(jnp.float32)
+        at_h = iota_h == h
+        tid = jnp.where(at_h, jnp.where(has, v, -1.0)[:, None], tid)
+        td = jnp.where(at_h, vd[:, None], td)
+        return ids, d, exp, hops, tid, td
+
+    ids, d, exp, hops, tid, td = jax.lax.fori_loop(
+        0, max_hops, hop,
+        (ids_ref[...], d_ref[...], exp_ref[...], jnp.zeros(tb, jnp.float32),
+         jnp.full((tb, max_hops), -1.0, jnp.float32),
+         jnp.full((tb, max_hops), jnp.inf, jnp.float32)))
+
+    _, has, v, _ = pick(ids, d, exp)
+    oi_ref[...] = ids.astype(jnp.int32)
+    od_ref[...] = d
+    oe_ref[...] = exp.astype(jnp.int32)
+    oh_ref[...] = hops.astype(jnp.int32)[:, None]
+    oti_ref[...] = tid.astype(jnp.int32)
+    otd_ref[...] = td
+    onx_ref[...] = jnp.where(has, v, -1.0).astype(jnp.int32)[:, None]
+    odn_ref[...] = (~has).astype(jnp.int32)[:, None]
+
+
+def _beam_adc_kernel(adj_ref, codes_ref, tables_ref, ids_ref, d_ref, exp_ref,
+                     *outs, max_hops: int, n: int, n_chunk: int):
+    tb = ids_ref.shape[0]
+    r = adj_ref.shape[1]
+    m_sub, k_cent = tables_ref.shape[1], tables_ref.shape[2]
+    codes_f = codes_ref[...]
+    tables = tables_ref[...]
+    kio = jax.lax.broadcasted_iota(jnp.int32, (tb, r, k_cent), 2)
+
+    def score(nbrs, valid):
+        nbc = jnp.maximum(nbrs, 0.0).reshape(tb * r, 1)
+        ncodes = _gather_rows(nbc, codes_f, n, n_chunk)          # (TB*R, M)
+        ncodes = ncodes.astype(jnp.int32).reshape(tb, r, m_sub)
+
+        def body(mi, acc):
+            c_m = jax.lax.dynamic_slice_in_dim(ncodes, mi, 1, axis=2)
+            onehot = (kio == c_m).astype(jnp.float32)            # (TB, R, K)
+            t_m = jax.lax.dynamic_slice_in_dim(tables, mi, 1, axis=1)
+            t_m = t_m.reshape(tb, 1, k_cent)
+            return acc + jnp.sum(onehot * t_m, axis=2)           # (TB, R)
+
+        nd = jax.lax.fori_loop(0, m_sub, body,
+                               jnp.zeros((tb, r), jnp.float32))
+        return jnp.where(valid, nd, jnp.inf)
+
+    _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
+              max_hops=max_hops, n=n, n_chunk=n_chunk)
+
+
+def _beam_l2_kernel(adj_ref, xn_ref, q_ref, ids_ref, d_ref, exp_ref,
+                    *outs, max_hops: int, n: int, n_chunk: int):
+    tb = ids_ref.shape[0]
+    r = adj_ref.shape[1]
+    dd = xn_ref.shape[1] - 1                     # last column = squared norm
+    xn = xn_ref[...]
+    q = q_ref[...]
+    qn = jnp.sum(q * q, axis=1)
+
+    def score(nbrs, valid):
+        nbc = jnp.maximum(nbrs, 0.0).reshape(tb * r, 1)
+        rows = _gather_rows(nbc, xn, n, n_chunk)                 # (TB*R, D+1)
+        vecs = rows[:, :dd].reshape(tb, r, dd)
+        n2g = rows[:, dd].reshape(tb, r)
+        dot = jax.lax.dot_general(vecs, q, (((2,), (1,)), ((0,), (0,))),
+                                  preferred_element_type=jnp.float32)
+        dist = jnp.maximum(n2g - 2.0 * dot + qn[:, None], 0.0)
+        return jnp.where(valid, dist, jnp.inf)
+
+    _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
+              max_hops=max_hops, n=n, n_chunk=n_chunk)
+
+
+def _out_shapes(b, l, max_hops):
+    i32, f32 = jnp.int32, jnp.float32
+    return (jax.ShapeDtypeStruct((b, l), i32),        # pool ids
+            jax.ShapeDtypeStruct((b, l), f32),        # pool dists
+            jax.ShapeDtypeStruct((b, l), i32),        # pool expanded
+            jax.ShapeDtypeStruct((b, 1), i32),        # hops used
+            jax.ShapeDtypeStruct((b, max_hops), i32), # frontier trace ids
+            jax.ShapeDtypeStruct((b, max_hops), f32), # frontier trace dists
+            jax.ShapeDtypeStruct((b, 1), i32),        # next frontier pick
+            jax.ShapeDtypeStruct((b, 1), i32))        # done mask
+
+
+def _out_specs(tile_b, l, max_hops):
+    return (pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, max_hops), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, max_hops), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "tile_b", "n_chunk",
+                                             "interpret"))
+def beam_hops_adc_pallas(adj, codes, tables, pool_ids, pool_d, pool_exp,
+                         max_hops: int, tile_b: int = 8, n_chunk: int = 2048,
+                         interpret: bool = False):
+    """adj (N, R) f32, codes (N, M) f32, tables (B, M, K) f32, seeded pool
+    (B, L) f32 triplet.  B % tile_b == 0 and N % n_chunk == 0 (ops pads).
+    Returns the 8-tuple of `_out_shapes` (hops/next/done as (B, 1))."""
+    b, l = pool_ids.shape
+    n = adj.shape[0]
+    assert b % tile_b == 0 and n % n_chunk == 0, (b, tile_b, n, n_chunk)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        functools.partial(_beam_adc_kernel, max_hops=max_hops, n=n,
+                          n_chunk=n_chunk),
+        grid=(b // tile_b,),
+        in_specs=[
+            full(adj.shape),
+            full(codes.shape),
+            pl.BlockSpec((tile_b,) + tables.shape[1:], lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+        ],
+        out_specs=_out_specs(tile_b, l, max_hops),
+        out_shape=_out_shapes(b, l, max_hops),
+        interpret=interpret,
+    )(adj, codes, tables, pool_ids, pool_d, pool_exp)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "tile_b", "n_chunk",
+                                             "interpret"))
+def beam_hops_l2_pallas(adj, xn, queries, pool_ids, pool_d, pool_exp,
+                        max_hops: int, tile_b: int = 8, n_chunk: int = 2048,
+                        interpret: bool = False):
+    """adj (N, R) f32, xn (N, D+1) f32 with squared norms in the last
+    column, queries (B, D) f32, seeded pool (B, L) f32 triplet.  Same
+    contract as `beam_hops_adc_pallas` with exact-L2 scoring."""
+    b, l = pool_ids.shape
+    n = adj.shape[0]
+    assert b % tile_b == 0 and n % n_chunk == 0, (b, tile_b, n, n_chunk)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        functools.partial(_beam_l2_kernel, max_hops=max_hops, n=n,
+                          n_chunk=n_chunk),
+        grid=(b // tile_b,),
+        in_specs=[
+            full(adj.shape),
+            full(xn.shape),
+            pl.BlockSpec((tile_b, queries.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+        ],
+        out_specs=_out_specs(tile_b, l, max_hops),
+        out_shape=_out_shapes(b, l, max_hops),
+        interpret=interpret,
+    )(adj, xn, queries, pool_ids, pool_d, pool_exp)

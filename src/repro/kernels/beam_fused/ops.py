@@ -1,0 +1,79 @@
+"""Public jit'd wrapper for the fused beam-hop kernel: padding + backend.
+
+`beam_hops` runs `max_hops` fused beam hops (frontier select + gather +
+score + pool merge per hop) over a seeded sorted pool and returns the
+final pool plus the per-hop frontier trace, next pick, and done mask.
+Two scoring modes select the operand set:
+
+- ADC (serving): pass ``tables`` (B, M, K) and ``codes`` (N, M);
+- exact L2 (construction frontier): pass ``x`` (N, D), ``n2`` (N,)
+  squared norms, and ``queries`` (B, D).
+
+backend: "pallas" (TPU), "interpret" (CPU-validated kernel), or "ref"
+(pure jnp scan, bit-identical to the unfused serve hop loop); "auto" =
+pallas on TPU else ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import beam_hops_adc_pallas, beam_hops_l2_pallas
+from .ref import beam_hops_ref
+
+
+def _pad_rows(a, mult: int, fill=0):
+    pad = (-a.shape[0]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "backend", "tile_b",
+                                             "n_chunk"))
+def beam_hops(adj, pool_ids, pool_d, pool_exp, max_hops: int,
+              tables=None, codes=None, x=None, n2=None, queries=None,
+              backend: str = "auto", tile_b: int = 8, n_chunk: int = 2048):
+    """Fused beam-hop loop.  adj (N, R) int32 with -1 pad; the seeded pool
+    (B, L) triplet must satisfy the `pool_merge` invariant (sorted by
+    (dist, id), invalid = (-1, +inf, False)).
+
+    Returns (pool_ids (B, L) int32, pool_d (B, L) f32, pool_exp (B, L)
+    bool, hops (B,) int32, trace_ids (B, max_hops) int32, trace_d
+    (B, max_hops) f32, next_id (B,) int32, done (B,) bool).
+    """
+    mode = "adc" if codes is not None else "l2"
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return beam_hops_ref(adj, pool_ids, pool_d, pool_exp, max_hops,
+                             mode=mode, tables=tables, codes=codes,
+                             x=x, n2=n2, queries=queries)
+
+    b0 = pool_ids.shape[0]
+    nc = min(n_chunk, max(adj.shape[0], 128))
+    adj_p = _pad_rows(adj.astype(jnp.float32), nc, fill=-1)
+    pids = _pad_rows(pool_ids.astype(jnp.float32), tile_b, fill=-1)
+    pd = _pad_rows(pool_d.astype(jnp.float32), tile_b, fill=jnp.inf)
+    pexp = _pad_rows(pool_exp.astype(jnp.float32), tile_b)
+    interpret = backend == "interpret"
+    if mode == "adc":
+        out = beam_hops_adc_pallas(
+            adj_p, _pad_rows(codes.astype(jnp.float32), nc),
+            _pad_rows(tables.astype(jnp.float32), tile_b),
+            pids, pd, pexp, max_hops, tile_b=tile_b, n_chunk=nc,
+            interpret=interpret)
+    else:
+        xn = jnp.concatenate(
+            [x.astype(jnp.float32), n2.astype(jnp.float32)[:, None]], axis=1)
+        out = beam_hops_l2_pallas(
+            adj_p, _pad_rows(xn, nc),
+            _pad_rows(queries.astype(jnp.float32), tile_b),
+            pids, pd, pexp, max_hops, tile_b=tile_b, n_chunk=nc,
+            interpret=interpret)
+    ids, d, exp, hops, tid, td, nxt, done = out
+    return (ids[:b0], d[:b0], exp[:b0].astype(bool), hops[:b0, 0],
+            tid[:b0], td[:b0], nxt[:b0, 0], done[:b0, 0].astype(bool))

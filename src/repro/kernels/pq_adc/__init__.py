@@ -1,2 +1,2 @@
-from .ops import pq_adc  # noqa: F401
-from .ref import pq_adc_ref  # noqa: F401
+from .ops import pq_adc, pq_adc_rowwise  # noqa: F401
+from .ref import pq_adc_ref, pq_adc_rowwise_ref  # noqa: F401

@@ -39,6 +39,54 @@ def _adc_kernel(codes_ref, tables_ref, out_ref, *, m_sub: int, k_cent: int):
     out_ref[...] = jax.lax.fori_loop(0, m_sub, body, acc)
 
 
+def _adc_rowwise_kernel(codes_ref, tables_ref, out_ref, *, m_sub: int,
+                        k_cent: int):
+    """codes (TB, R, M) int32 | tables (TB, M, K) f32 -> out (TB, R) f32."""
+    tb, r, _ = codes_ref.shape
+    codes = codes_ref[...]                          # (TB, R, M)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tb, r, k_cent), 2)
+
+    def body(m, acc):
+        c_m = jax.lax.dynamic_slice_in_dim(codes, m, 1, axis=2)   # (TB, R, 1)
+        onehot = (col == c_m).astype(jnp.float32)                 # (TB, R, K)
+        t_m = jax.lax.dynamic_slice_in_dim(tables_ref[...], m, 1, axis=1)
+        t_m = t_m.reshape(tb, 1, k_cent)                          # (TB, 1, K)
+        return acc + jnp.sum(onehot * t_m, axis=2)                # (TB, R)
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, m_sub, body, jnp.zeros((tb, r), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def pq_adc_rowwise_pallas(tables: jnp.ndarray, cand_codes: jnp.ndarray,
+                          tile_b: int = 8,
+                          interpret: bool = False) -> jnp.ndarray:
+    """tables (B, M, K) f32, cand_codes (B, R, M) int -> (B, R) f32.
+
+    B must be a multiple of tile_b (ops.py pads).  One grid step scores a
+    query tile's gathered candidate codes against its own tables -- the
+    per-hop neighbor-scoring stage of the batched beam, kept VMEM-local
+    (the one-hot * table form of the MXU trick in `_adc_kernel`, reduced
+    on the VPU because each row has a private table).
+    """
+    b, m_sub, k_cent = tables.shape
+    r = cand_codes.shape[1]
+    assert b % tile_b == 0, (b, tile_b)
+    cand_codes = cand_codes.astype(jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_adc_rowwise_kernel, m_sub=m_sub, k_cent=k_cent),
+        grid=(b // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, r, m_sub), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, m_sub, k_cent), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=interpret,
+    )(cand_codes, tables)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_n", "tile_b", "interpret"))
 def pq_adc_pallas(tables: jnp.ndarray, codes: jnp.ndarray,
                   tile_n: int = 256, tile_b: int = 8,

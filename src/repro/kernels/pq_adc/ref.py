@@ -18,3 +18,20 @@ def pq_adc_ref(tables: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
         axis=3,
     )  # (B, N, M, 1)
     return g[..., 0].sum(-1)
+
+
+def pq_adc_rowwise_ref(tables: jnp.ndarray,
+                       cand_codes: jnp.ndarray) -> jnp.ndarray:
+    """Per-row ADC: each query scores its *own* gathered candidate codes.
+
+    tables (B, M, K) f32; cand_codes (B, R, M) uint8/int32 -> (B, R) f32.
+    The hop-loop form of ADC: the serve beam gathers each row's popped
+    adjacency codes, so unlike `pq_adc_ref` there is no shared corpus
+    axis.  est[b, r] = sum_m tables[b, m, cand_codes[b, r, m]].
+    """
+    g = jnp.take_along_axis(
+        tables[:, None],                             # (B, 1, M, K)
+        cand_codes[..., None].astype(jnp.int32),     # (B, R, M, 1)
+        axis=3,
+    )  # (B, R, M, 1)
+    return g[..., 0].sum(-1)

@@ -23,6 +23,12 @@ lifetime of the server:
   padded adjacency row `(B, R)`, and ADC-scores the gathered neighbor codes
   `(B, R, M)` against the per-row tables.  Rows whose pool is exhausted
   no-op via masking (`-1` neighbors score `+inf` and never enter the pool).
+  Under a `fused*` backend the whole loop instead runs as one VMEM-resident
+  Pallas program (`repro.kernels.beam_fused`: frontier select, one-hot
+  adjacency/code gathers, inlined rowwise ADC, and a sort-free ranked pool
+  merge per hop) -- bit-identical pool ids by construction, no per-hop
+  HBM round-trip.  The unfused path stays as the oracle, its per-stage
+  kernels (`pq_adc`, `pq_adc_rowwise`) dispatched on the same backend knob.
 - **Exact re-rank** gathers the raw vectors of each row's top `rerank` pool
   entries and merges through `repro.kernels.l2_topk.l2_topk_rowwise`.
 
@@ -45,8 +51,13 @@ import numpy as np
 
 from repro.build.pool import pool_merge as _pool_merge
 from repro.core.pq import adc_tables as _adc_tables
+from repro.kernels.beam_fused.ops import beam_hops
 from repro.kernels.l2_topk.ops import l2_topk_rowwise
-from repro.kernels.pq_adc.ops import pq_adc
+from repro.kernels.pq_adc.ops import pq_adc, pq_adc_rowwise
+
+# backend -> the pq_adc/beam_hops backend every stage dispatches on
+_FUSED_INNER = {"fused": "auto", "fused_pallas": "pallas",
+                "fused_interpret": "interpret", "fused_ref": "ref"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,13 +67,16 @@ class EngineConfig:
     n_entry: int = 4          # entry seeds per query
     rerank: Optional[int] = None   # pool prefix reranked exactly (None = l)
     n_entry_cands: int = 256  # entry candidate pool scored by pq_adc
-    backend: str = "auto"     # pq_adc backend: "auto" | "pallas" | "ref"
-
-
-def _adc_gather(tables: jnp.ndarray, cand_codes: jnp.ndarray) -> jnp.ndarray:
-    """Per-row ADC: tables (B, M, K), cand_codes (B, R, M) -> (B, R)."""
-    g = jnp.take_along_axis(tables[:, None], cand_codes[..., None], axis=3)
-    return g[..., 0].sum(-1)
+    # kernel backend, reaching entry scoring AND the hop loop:
+    #   "auto"             fused kernel on TPU, unfused jnp ("ref") on CPU
+    #   "pallas"/"interpret"/"ref"   unfused hop loop; per-stage kernels
+    #                      (pq_adc entry scoring, pq_adc_rowwise neighbor
+    #                      scoring) on the named pq_adc backend
+    #   "fused"            one Pallas program for the whole hop loop
+    #                      (repro.kernels.beam_fused; auto inner backend)
+    #   "fused_pallas"/"fused_interpret"/"fused_ref"   fused loop pinned
+    #                      to one beam_hops backend (parity/CI)
+    backend: str = "auto"
 
 
 @functools.partial(jax.jit, static_argnames=("k", "l", "max_hops", "n_entry",
@@ -79,10 +93,14 @@ def batched_search(x, adj, codes, codebooks, entry_cands, entry_codes,
     """
     b = queries.shape[0]
     queries = queries.astype(jnp.float32)
+    if backend == "auto" and jax.default_backend() == "tpu":
+        backend = "fused"
+    fused = backend in _FUSED_INNER
+    inner = _FUSED_INNER.get(backend, backend)
     tables = _adc_tables(queries, codebooks)               # (B, M, K)
 
     # --- query-sensitive entry selection: pq_adc over the candidate pool
-    ed = pq_adc(tables, entry_codes, backend=backend)      # (B, E)
+    ed = pq_adc(tables, entry_codes, backend=inner)        # (B, E)
     seed_neg, seed_idx = jax.lax.top_k(-ed, n_entry)
     seed_ids = entry_cands[seed_idx].astype(jnp.int32)     # (B, n_entry)
 
@@ -95,23 +113,30 @@ def batched_search(x, adj, codes, codebooks, entry_cands, entry_codes,
     rows = jnp.arange(b)
     codes_i = codes.astype(jnp.int32)
 
-    def step(state, _):
-        pool_ids, pool_d, pool_exp, hops = state
-        frontier_d = jnp.where(pool_exp | (pool_ids < 0), jnp.inf, pool_d)
-        j = jnp.argmin(frontier_d, axis=1)                 # (B,)
-        has = jnp.isfinite(frontier_d[rows, j])
-        v = jnp.where(has, pool_ids[rows, j], 0)
-        pool_exp = pool_exp.at[rows, j].set(pool_exp[rows, j] | has)
-        nbrs = jnp.where(has[:, None], adj[v], -1)         # (B, R)
-        nd = _adc_gather(tables, codes_i[jnp.clip(nbrs, 0)])
-        nd = jnp.where(nbrs >= 0, nd, jnp.inf)
-        pool_ids, pool_d, pool_exp = _pool_merge(
-            pool_ids, pool_d, pool_exp, nbrs, nd, l)
-        return (pool_ids, pool_d, pool_exp, hops + has), None
+    if fused:
+        # --- one VMEM-resident program for the whole hop loop
+        pool_ids, pool_d, pool_exp, hops, *_ = beam_hops(
+            adj, pool_ids, pool_d, pool_exp, max_hops,
+            tables=tables, codes=codes_i, backend=inner)
+    else:
+        def step(state, _):
+            pool_ids, pool_d, pool_exp, hops = state
+            frontier_d = jnp.where(pool_exp | (pool_ids < 0), jnp.inf, pool_d)
+            j = jnp.argmin(frontier_d, axis=1)             # (B,)
+            has = jnp.isfinite(frontier_d[rows, j])
+            v = jnp.where(has, pool_ids[rows, j], 0)
+            pool_exp = pool_exp.at[rows, j].set(pool_exp[rows, j] | has)
+            nbrs = jnp.where(has[:, None], adj[v], -1)     # (B, R)
+            nd = pq_adc_rowwise(tables, codes_i[jnp.clip(nbrs, 0)],
+                                backend=inner)
+            nd = jnp.where(nbrs >= 0, nd, jnp.inf)
+            pool_ids, pool_d, pool_exp = _pool_merge(
+                pool_ids, pool_d, pool_exp, nbrs, nd, l)
+            return (pool_ids, pool_d, pool_exp, hops + has), None
 
-    (pool_ids, pool_d, pool_exp, hops), _ = jax.lax.scan(
-        step, (pool_ids, pool_d, pool_exp, jnp.zeros(b, jnp.int32)),
-        None, length=max_hops)
+        (pool_ids, pool_d, pool_exp, hops), _ = jax.lax.scan(
+            step, (pool_ids, pool_d, pool_exp, jnp.zeros(b, jnp.int32)),
+            None, length=max_hops)
 
     # --- exact re-rank of each row's pool prefix
     cand = pool_ids[:, :rerank]                            # (B, C)

@@ -7,7 +7,8 @@ import pytest
 
 from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 from repro.kernels.l2_topk import l2_topk, l2_topk_ref
-from repro.kernels.pq_adc import pq_adc, pq_adc_ref
+from repro.kernels.pq_adc import (pq_adc, pq_adc_ref, pq_adc_rowwise,
+                                  pq_adc_rowwise_ref)
 
 RNG = np.random.default_rng(0)
 
@@ -20,6 +21,20 @@ def test_pq_adc_sweep(b, n, m, k):
     codes = jnp.asarray(RNG.integers(0, k, (n, m)), jnp.uint8)
     ref = pq_adc_ref(tables, codes)
     out = pq_adc(tables, codes, backend="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,r,m,k", [
+    (1, 8, 8, 16), (3, 33, 16, 256), (9, 64, 4, 64), (2, 5, 32, 256),
+])
+def test_pq_adc_rowwise_sweep(b, r, m, k):
+    """Per-row codes (the serve hop's neighbor scoring): interpret vs ref."""
+    tables = jnp.asarray(RNG.random((b, m, k)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, k, (b, r, m)), jnp.int32)
+    ref = pq_adc_rowwise_ref(tables, codes)
+    out = pq_adc_rowwise(tables, codes, backend="interpret")
+    assert out.shape == (b, r)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
 
