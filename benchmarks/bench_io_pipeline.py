@@ -13,13 +13,23 @@ Emits, per the PR's acceptance criteria, for BAMG on the synthetic corpus:
       reads.
 Plus a policy x cache-size sweep (NIO + hit rate) for bamg / starling /
 diskann, and a `warm` row for the cross-query warm-cache serving mode.
+
+Fault sweep (resilience PR): read-error rate x retry budget ->
+qps_pipelined, p99 service time, recall delta vs the clean run, and the
+degraded-query fraction.  Acceptance: at a 1% error rate with the default
+budget of 3 retries, >=95% of queries are non-degraded and nothing
+crashes; a zero-rate plan is asserted bit-identical to no plan.
 """
+from repro.utils.faults import FaultSpec, RetryPolicy
+
 from . import common
 
 POLICIES = ("lru", "fifo", "clock", "2q")
 CACHE_SIZES = (16, 64, 256)
 QDS = (1, 4, 16)
 K, L = 10, 48
+ERROR_RATES = (0.01, 0.05)
+RETRY_BUDGETS = (0, 1, 3)
 
 
 def run(regime: str = "sift-like") -> None:
@@ -87,6 +97,42 @@ def run(regime: str = "sift-like") -> None:
                     round(warm.mean_nio, 2),
                     f"recall={warm.recall:.3f};"
                     f"hit_rate={warm.cache_hit_rate:.3f}")
+
+    # --- fault sweep: error rate x retry budget ---------------------------
+    bamg.configure_io(cache_policy="lru", cache_blocks=256, qd=8,
+                      batch_io=True, faults=None, retry=None)
+    clean = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+
+    # zero-rate plan with the machinery armed: bit-identical accounting
+    bamg.configure_io(faults=FaultSpec(), retry=RetryPolicy(),
+                      timeout_us=20_000.0, hedge_us=500.0)
+    z = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+    common.emit(f"io_pipeline.{regime}.bamg.fault0.parity_nio_delta",
+                abs(z.mean_nio - clean.mean_nio),
+                f"recall_delta={abs(z.recall - clean.recall):.4f};"
+                f"retries={z.mean_retries};hedges={z.mean_hedges}")
+    assert z.mean_nio == clean.mean_nio and z.recall == clean.recall, \
+        "zero-rate fault plan changed accounting"
+    assert z.mean_retries == 0 and z.mean_hedges == 0
+
+    for rate in ERROR_RATES:
+        for budget in RETRY_BUDGETS:
+            bamg.configure_io(faults=FaultSpec(read_error_rate=rate),
+                              fault_seed=7, retry=RetryPolicy(budget=budget),
+                              timeout_us=None, hedge_us=None)
+            st = bamg.search_batch(q, k=K, l=L, gt=ds.gt)
+            common.emit(
+                f"io_pipeline.{regime}.bamg.err{rate}.retry{budget}.qps",
+                round(st.qps_pipelined, 1),
+                f"p99_service_us={st.p99_service_us:.1f};"
+                f"recall_delta={clean.recall - st.recall:.4f};"
+                f"degraded={st.degraded_fraction:.3f};"
+                f"retries={st.mean_retries:.2f};"
+                f"failed_reads={st.mean_failed_reads:.2f}")
+            if rate == 0.01 and budget == 3:
+                assert st.degraded_fraction <= 0.05, \
+                    "1% errors at budget 3 must keep >=95% queries clean"
+    bamg.configure_io(faults=None, retry=None, qd=1, batch_io=False)
 
 
 if __name__ == "__main__":

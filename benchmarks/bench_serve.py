@@ -10,14 +10,26 @@ the fused beam kernel (`EngineConfig(backend="fused")`; auto-resolves to
 the jnp fused oracle on CPU, the Pallas program on TPU) by differencing
 engine wall time across two hop budgets -- entry selection, re-rank and
 dispatch overheads subtract out.
+
+Resilience rows (degraded-mode serving + blue/green deploy):
+  serve.degraded.*     sharded front-end with one shard killed via the
+                       engine fault hook -- recall/qps of the partial
+                       answers plus the health snapshot; then healed and
+                       asserted bit-identical to the clean run.
+  serve.deploy.*       full blue/green round-trip on a temp root:
+                       publish -> validate -> promote -> hot swap ->
+                       rollback, serving correct top-k at every stage.
 """
+import tempfile
 import time
 
 import numpy as np
 
 from . import common
 from repro.core.distances import recall_at_k
-from repro.serve import BatchedANNEngine, EngineConfig
+from repro.core.engine import BAMGParams
+from repro.serve import (BatchedANNEngine, BlueGreenEngine,
+                         DeploymentManager, EngineConfig, ShardedFrontend)
 
 K = 10
 L = 48
@@ -79,6 +91,64 @@ def run() -> None:
     common.emit("serve.fused.b64.hop_speedup",
                 round(per_hop["ref"] / per_hop["fused"], 2),
                 "unfused_scan_vs_fused_kernel")
+
+    # --- degraded-mode serving: kill one shard of a sharded front-end -----
+    fe = ShardedFrontend.build(ds.base, n_shards=3,
+                               params=BAMGParams(r=16, l_build=32, seed=0),
+                               config=EngineConfig(l=L, max_hops=32))
+    ids, _ = fe.search_batch(ds.queries, K)
+    clean_rec = recall_at_k(ids, ds.gt, K)
+    common.emit("serve.degraded.clean.recall", round(clean_rec, 3),
+                f"shards_up={fe.health()['shards_up']}/3")
+    fe.engines[0].inject_fault()
+    t0 = time.perf_counter()
+    dids, _, status = fe.search_batch(ds.queries, K, with_status=True)
+    dt = time.perf_counter() - t0
+    h = fe.health()
+    common.emit("serve.degraded.1down.recall",
+                round(recall_at_k(dids, ds.gt, K), 3),
+                f"shards_up={h['shards_up']}/3;"
+                f"degraded_frac={status.degraded.mean():.2f};"
+                f"qps={len(ds.queries) / dt:.1f}")
+    assert status.degraded.all() and h["shards_up"] == 2, \
+        "killed shard must be skipped and reported"
+    fe.engines[0].heal()
+    fe.mark_up(0)
+    rids, _ = fe.search_batch(ds.queries, K)
+    assert (rids == ids).all(), "healed fleet must serve bit-identically"
+    common.emit("serve.degraded.healed.recall",
+                round(recall_at_k(rids, ds.gt, K), 3), "bit_identical=1")
+
+    # --- blue/green deploy round-trip -------------------------------------
+    cfg = EngineConfig(l=L, max_hops=32)
+    with tempfile.TemporaryDirectory() as root:
+        dm = DeploymentManager(root)
+        t0 = time.perf_counter()
+        man = dm.deploy(ds.base, "v1", ds.queries, ds.gt[:, :K],
+                        params=BAMGParams(r=16, l_build=32, seed=0),
+                        k=K, min_recall=0.5, config=cfg)
+        common.emit("serve.deploy.v1.s", round(time.perf_counter() - t0, 2),
+                    f"recall={man.meta['validated_recall']:.3f};"
+                    f"active={dm.active()}")
+        bg = BlueGreenEngine(dm, cfg)
+        v1_ids, _ = bg.search_batch(ds.queries, K)
+        dm.deploy(ds.base, "v2", ds.queries, ds.gt[:, :K],
+                  params=BAMGParams(r=16, l_build=32, seed=1),
+                  k=K, min_recall=0.5, config=cfg)
+        swapped = bg.refresh()
+        v2_ids, _ = bg.search_batch(ds.queries, K)
+        common.emit("serve.deploy.v2.recall",
+                    round(recall_at_k(v2_ids, ds.gt, K), 3),
+                    f"swapped={int(swapped)};active={dm.active()}")
+        assert swapped and dm.active() == "v2"
+        dm.rollback()
+        bg.refresh()
+        rb_ids, _ = bg.search_batch(ds.queries, K)
+        assert (rb_ids == v1_ids).all(), \
+            "rollback must restore bit-identical serving"
+        common.emit("serve.deploy.rollback.recall",
+                    round(recall_at_k(rb_ids, ds.gt, K), 3),
+                    f"active={dm.active()};bit_identical=1")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.build import BuildConfig, GraphBuilder
+from repro.utils.faults import FaultPlan, FaultSpec, RetryPolicy
 
 from .bamg import BAMGGraph
 from .block_assign import bnf_blocks, block_members
@@ -66,24 +67,47 @@ def _batch(search_one, queries, gt, k: int, cost: CostModel,
     return _aggregate(res, gt, k, cost)
 
 
-def _update_io_params(p, updates: dict) -> None:
-    """None-means-unchanged in-place update of an index's params."""
+# configure_io sentinel: None is a meaningful value for the fault/deadline
+# knobs (it *disables* them), so "leave unchanged" needs its own marker
+_KEEP = object()
+
+
+def _update_io_params(p, updates: dict, keep_updates: dict | None = None) -> None:
+    """None-means-unchanged in-place update of an index's params; entries in
+    `keep_updates` use the _KEEP sentinel instead (None is meaningful)."""
     for name, val in updates.items():
         if val is not None:
             setattr(p, name, val)
+    for name, val in (keep_updates or {}).items():
+        if val is not _KEEP:
+            setattr(p, name, val)
 
 
-def _configure_coupled_io(idx, cache_policy, cache_blocks, qd, batch_io):
+def _fault_plan(p) -> Optional[FaultPlan]:
+    """The index's seeded fault plan (None when fault injection is off)."""
+    return FaultPlan(p.faults, seed=p.fault_seed) if p.faults is not None else None
+
+
+def _cost_for(p) -> CostModel:
+    return CostModel(qd=p.qd, timeout_us=p.timeout_us, hedge_us=p.hedge_us)
+
+
+def _configure_coupled_io(idx, cache_policy, cache_blocks, qd, batch_io,
+                          faults=_KEEP, fault_seed=None, retry=_KEEP,
+                          timeout_us=_KEEP, hedge_us=_KEEP):
     """Rebuild only the coupled storage/scheduler with new I/O knobs (the
     graph, PQ codes, and layout are untouched) -- cheap sweeps."""
     _update_io_params(idx.params, dict(
         cache_policy=cache_policy, cache_blocks=cache_blocks, qd=qd,
-        batch_io=batch_io))
+        batch_io=batch_io, fault_seed=fault_seed),
+        dict(faults=faults, retry=retry, timeout_us=timeout_us,
+             hedge_us=hedge_us))
     p = idx.params
     idx.store = CoupledStorage(idx.x, idx.adj, order=idx.store.layout,
                                policy=p.cache_policy,
                                cache_blocks=p.cache_blocks,
-                               cost=CostModel(qd=p.qd))
+                               cost=_cost_for(p), faults=_fault_plan(p),
+                               retry=p.retry)
     idx.cost = idx.store.scheduler.cost
     return idx
 
@@ -128,6 +152,12 @@ class BatchStats:
     mean_serial_us: float = 0.0    # same demand misses, strictly serial
     cache_hit_rate: float = 0.0    # hits / (hits + NIO) over the batch
     qps_pipelined: float = 0.0     # QPS with the pipelined service time
+    # resilience (fault injection; all zero on a clean run)
+    degraded_fraction: float = 0.0  # queries that lost >=1 block to faults
+    mean_failed_reads: float = 0.0  # undeliverable blocks skipped per query
+    mean_retries: float = 0.0       # extra read attempts per query
+    mean_hedges: float = 0.0        # hedged duplicate reads per query
+    p99_service_us: float = 0.0     # tail of the pipelined service time
 
 
 def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
@@ -142,7 +172,8 @@ def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
             m = min(k, len(r.ids))
             idm[i, :m] = r.ids[:m]
         rec = recall_at_k(idm, gt, k)
-    service = float(np.mean([r.service_us for r in results]))
+    service_all = np.asarray([r.service_us for r in results], np.float64)
+    service = float(service_all.mean())
     hits = float(np.sum([r.cache_hits for r in results]))
     total_nio = float(np.sum([r.nio for r in results]))
     return BatchStats(
@@ -154,7 +185,12 @@ def _aggregate(results: list[SearchResult], gt: Optional[np.ndarray], k: int,
         mean_service_us=service,
         mean_serial_us=float(np.mean([r.serial_us for r in results])),
         cache_hit_rate=hits / (hits + total_nio) if hits + total_nio else 0.0,
-        qps_pipelined=cost.qps_from_io_us(service, nd, npq))
+        qps_pipelined=cost.qps_from_io_us(service, nd, npq),
+        degraded_fraction=float(np.mean([r.degraded for r in results])),
+        mean_failed_reads=float(np.mean([r.failed_reads for r in results])),
+        mean_retries=float(np.mean([r.retries for r in results])),
+        mean_hedges=float(np.mean([r.hedges for r in results])),
+        p99_service_us=float(np.percentile(service_all, 99)))
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +208,11 @@ class DiskANNParams:
     batch_io: bool = False           # batched submissions + prefetch
     build_backend: str = "host"      # graph construction: "host" | "batched"
     build_batch: int = 256           # nodes per batched-build step
+    faults: Optional[FaultSpec] = None   # fault injection (None = clean disk)
+    fault_seed: int = 0              # seed of the deterministic fault plan
+    retry: Optional[RetryPolicy] = None  # bounded-retry policy (None = default)
+    timeout_us: Optional[float] = None   # abandon an attempt past this
+    hedge_us: Optional[float] = None     # duplicate-read hedge age
     seed: int = 0
 
 
@@ -197,16 +238,22 @@ class DiskANNIndex:
         codes = codec.encode(x)
         store = CoupledStorage(x, adj, policy=params.cache_policy,
                                cache_blocks=params.cache_blocks,
-                               cost=CostModel(qd=params.qd))
+                               cost=_cost_for(params),
+                               faults=_fault_plan(params), retry=params.retry)
         return cls(x, adj, entry, codec, codes, store, params)
 
     def configure_io(self, cache_policy: Optional[str] = None,
                      cache_blocks: Optional[int] = None,
                      qd: Optional[int] = None,
-                     batch_io: Optional[bool] = None) -> "DiskANNIndex":
+                     batch_io: Optional[bool] = None,
+                     faults=_KEEP, fault_seed: Optional[int] = None,
+                     retry=_KEEP, timeout_us=_KEEP,
+                     hedge_us=_KEEP) -> "DiskANNIndex":
         """Rebuild only the storage/scheduler with new I/O knobs."""
         return _configure_coupled_io(self, cache_policy, cache_blocks, qd,
-                                     batch_io)
+                                     batch_io, faults=faults,
+                                     fault_seed=fault_seed, retry=retry,
+                                     timeout_us=timeout_us, hedge_us=hedge_us)
 
     def search(self, q: np.ndarray, k: int, l: int,
                drop_cache: bool = True) -> SearchResult:
@@ -246,6 +293,11 @@ class StarlingParams:
     batch_io: bool = False
     build_backend: str = "host"  # graph construction: "host" | "batched"
     build_batch: int = 256       # nodes per batched-build step
+    faults: Optional[FaultSpec] = None   # fault injection (None = clean disk)
+    fault_seed: int = 0              # seed of the deterministic fault plan
+    retry: Optional[RetryPolicy] = None  # bounded-retry policy (None = default)
+    timeout_us: Optional[float] = None   # abandon an attempt past this
+    hedge_us: Optional[float] = None     # duplicate-read hedge age
     seed: int = 0
 
 
@@ -278,7 +330,8 @@ class StarlingIndex:
         store = CoupledStorage(x, adj, order=order,
                                policy=params.cache_policy,
                                cache_blocks=params.cache_blocks,
-                               cost=CostModel(qd=params.qd))
+                               cost=_cost_for(params),
+                               faults=_fault_plan(params), retry=params.retry)
         # Starling nav graph: random sample + Vamana over the sample
         rng = np.random.default_rng(params.seed)
         ns = max(16, int(len(x) * params.nav_sample))
@@ -294,10 +347,15 @@ class StarlingIndex:
     def configure_io(self, cache_policy: Optional[str] = None,
                      cache_blocks: Optional[int] = None,
                      qd: Optional[int] = None,
-                     batch_io: Optional[bool] = None) -> "StarlingIndex":
+                     batch_io: Optional[bool] = None,
+                     faults=_KEEP, fault_seed: Optional[int] = None,
+                     retry=_KEEP, timeout_us=_KEEP,
+                     hedge_us=_KEEP) -> "StarlingIndex":
         """Rebuild only the storage/scheduler with new I/O knobs."""
         return _configure_coupled_io(self, cache_policy, cache_blocks, qd,
-                                     batch_io)
+                                     batch_io, faults=faults,
+                                     fault_seed=fault_seed, retry=retry,
+                                     timeout_us=timeout_us, hedge_us=hedge_us)
 
     def _nav_entries(self, table: np.ndarray, n_entry: int = 4) -> list[int]:
         # greedy over the sampled nav graph using PQ distances
@@ -355,7 +413,7 @@ def _make_decoupled_store(x, graph, nav, p) -> DecoupledStorage:
         cache_blocks=p.cache_blocks, vec_cache_blocks=p.vec_cache_blocks,
         policy=p.cache_policy,
         vec_policy=p.vec_cache_policy, pinned_gblocks=pins,
-        cost=CostModel(qd=p.qd))
+        cost=_cost_for(p), faults=_fault_plan(p), retry=p.retry)
 
 
 @dataclasses.dataclass
@@ -381,6 +439,11 @@ class BAMGParams:
     build_backend: str = "host"      # graph construction: "host" | "batched"
     build_batch: int = 256           # nodes per batched-build step
     build_knn: str = "clustered"     # batched kNN stage: "clustered"|"exact"
+    faults: Optional[FaultSpec] = None   # fault injection (None = clean disk)
+    fault_seed: int = 0              # seed of the deterministic fault plan
+    retry: Optional[RetryPolicy] = None  # bounded-retry policy (None = default)
+    timeout_us: Optional[float] = None   # abandon an attempt past this
+    hedge_us: Optional[float] = None     # duplicate-read hedge age
     seed: int = 0
 
 
@@ -431,13 +494,19 @@ class BAMGIndex:
                      vec_cache_blocks: Optional[int] = None,
                      qd: Optional[int] = None,
                      batch_io: Optional[bool] = None,
-                     pin_nav_blocks: Optional[int] = None) -> "BAMGIndex":
+                     pin_nav_blocks: Optional[int] = None,
+                     faults=_KEEP, fault_seed: Optional[int] = None,
+                     retry=_KEEP, timeout_us=_KEEP,
+                     hedge_us=_KEEP) -> "BAMGIndex":
         """Rebuild only the storage/scheduler with new I/O knobs (graph, PQ
         codes, and nav graph untouched) -- cheap policy/QD/pinning sweeps."""
         _update_io_params(self.params, dict(
             cache_policy=cache_policy, vec_cache_policy=vec_cache_policy,
             cache_blocks=cache_blocks, vec_cache_blocks=vec_cache_blocks,
-            qd=qd, batch_io=batch_io, pin_nav_blocks=pin_nav_blocks))
+            qd=qd, batch_io=batch_io, pin_nav_blocks=pin_nav_blocks,
+            fault_seed=fault_seed),
+            dict(faults=faults, retry=retry, timeout_us=timeout_us,
+                 hedge_us=hedge_us))
         self.store = _make_decoupled_store(self.x, self.graph, self.nav,
                                            self.params)
         self.cost = self.store.scheduler.cost

@@ -32,6 +32,24 @@ Starling-style) in memory forever; pins count against capacity.
 Cost model (defaults match the paper's hardware: SATA SSD, 4 KB reads):
   t_query = NIO * t_read + t_cpu          (serial, qd=1)
   t_read  ~ 100 us per 4 KB random read (SATA SSD)
+
+Resilience (beyond-paper; `repro.utils.faults`): a `BlockDevice` may carry a
+seeded deterministic `FaultPlan` injecting read errors, dead blocks, torn
+payloads, and latency spikes.  The scheduler then resolves every demand
+miss through a *resilient read*: per-block CRC32 checksums catch torn
+transfers, a bounded `RetryPolicy` (exponential backoff + jitter) retries
+transient failures, `CostModel.timeout_us` abandons straggling attempts,
+and `CostModel.hedge_us` races a duplicate (hedged) read against a spiking
+one.  Accounting separation is preserved exactly: NIO still counts only
+*successful* payload deliveries; wasted attempts land in the new `IOStats`
+counters (`retries`, `read_errors`, `timeouts`, `checksum_failures`,
+`hedges`, `hedge_wins`, `failed_reads`) and their time in the timing
+domain.  With a zero-rate plan (or no plan) the resilient path is
+bit-identical to the plain one -- same NIO, same cache state, same service
+time (property-tested in tests/test_faults.py).  A block whose retry
+budget is exhausted (or that is persistently dead) yields the
+`READ_FAILED` sentinel instead of raising, so readers can degrade
+(skip-and-continue) rather than crash.
 """
 from __future__ import annotations
 
@@ -39,7 +57,14 @@ import dataclasses
 from collections import OrderedDict
 from typing import Iterable, Optional, Sequence
 
+from repro.utils.faults import (FaultPlan, RetryPolicy, corrupt_payload,
+                                payload_checksum)
+
 BLOCK_SIZE = 4096  # OS page / logical disk block
+
+# Returned (never raised) for a block whose resilient read exhausted its
+# retry budget or hit a persistently dead block: readers degrade, not crash.
+READ_FAILED = object()
 
 # Dedicated miss marker: a cached payload may legitimately be None (e.g. the
 # placeholder span blocks of oversized coupled records), so None cannot mean
@@ -54,6 +79,15 @@ class IOStats:
     graph_reads: int = 0    # graph-index block fetches
     vector_reads: int = 0   # raw-vector block fetches (BAMG decoupled layout)
     cache_hits: int = 0
+    # resilience counters (fault injection; all stay 0 on the clean path).
+    # None of these enter `nio`: NIO counts only successful deliveries.
+    retries: int = 0            # extra attempts beyond the first
+    read_errors: int = 0        # attempts that failed outright
+    timeouts: int = 0           # attempts abandoned at CostModel.timeout_us
+    checksum_failures: int = 0  # torn payloads caught by the block checksum
+    hedges: int = 0             # duplicate reads issued against stragglers
+    hedge_wins: int = 0         # hedges that completed before the original
+    failed_reads: int = 0       # reads that exhausted the retry budget
 
     @property
     def nio(self) -> int:
@@ -71,14 +105,12 @@ class IOStats:
         return self.cache_hits / t if t else 0.0
 
     def reset(self) -> None:
-        self.graph_reads = 0
-        self.vector_reads = 0
-        self.cache_hits = 0
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
 
     def add(self, other: "IOStats") -> None:
-        self.graph_reads += other.graph_reads
-        self.vector_reads += other.vector_reads
-        self.cache_hits += other.cache_hits
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
 
 
 # ---------------------------------------------------------------------------
@@ -404,16 +436,26 @@ class BlockDevice:
     `CachePolicy` of `cache_blocks` entries; a miss costs one I/O.  `pinned`
     block ids are preloaded at construction and at every cache-dropping
     reset, and are never evicted (their load is startup cost, not NIO).
+
+    `faults` attaches a seeded `FaultPlan`; fault resolution (retry,
+    checksum verification, hedging) happens in `IOScheduler.submit` -- the
+    plain `read` keeps its exact pre-fault contract and is what the
+    scheduler calls to commit a verified delivery.  Block checksums are
+    computed lazily per block (`checksum`/`verify`) so the no-fault path
+    pays nothing.
     """
 
     def __init__(self, blocks: list, block_size: int = BLOCK_SIZE,
                  cache_blocks: int = 128, kind: str = "graph",
                  policy: str | CachePolicy = "lru",
-                 pinned: Iterable[int] = ()):
+                 pinned: Iterable[int] = (),
+                 faults: Optional[FaultPlan] = None):
         self.blocks = blocks
         self.block_size = block_size
         self.kind = kind
         self.cache_blocks = cache_blocks
+        self.faults = faults
+        self._sums: dict[int, int] = {}
         self.pinned = tuple(sorted({int(p) for p in pinned}))
         for p in self.pinned:
             if p < 0 or p >= len(blocks):
@@ -463,6 +505,28 @@ class BlockDevice:
         """Sequential multi-block read (each block still counted)."""
         return [self.read(b) for b in range(start, start + count)]
 
+    # --- checksums + fault hooks (resilient reads; see IOScheduler) --------
+    def checksum(self, block_id: int) -> int:
+        """CRC32 of the block's true payload (memoized)."""
+        s = self._sums.get(block_id)
+        if s is None:
+            s = payload_checksum(self.blocks[block_id])
+            self._sums[block_id] = s
+        return s
+
+    def verify(self, block_id: int, payload=None) -> bool:
+        """Does `payload` (default: the stored payload) match the block's
+        recorded checksum?"""
+        p = self.blocks[block_id] if payload is None else payload
+        return payload_checksum(p) == self.checksum(block_id)
+
+    def attempt_payload(self, block_id: int, corrupt: bool, salt: int = 0):
+        """The payload one device transfer would deliver: the true payload,
+        or (for a torn transfer) a deterministically perturbed copy.  Pure
+        -- no accounting, no cache effects."""
+        p = self.blocks[block_id]
+        return corrupt_payload(p, salt) if corrupt else p
+
 
 # ---------------------------------------------------------------------------
 # Cost model + pipelined scheduler
@@ -487,6 +551,9 @@ class CostModel:
     threads: int = 8
     qd: int = 1                 # queue depth for batched submissions
     submit_us: float = 0.0      # per-submission overhead (io_uring ~1-2 us)
+    # deadline accounting (fault injection; None disables either knob):
+    timeout_us: Optional[float] = None  # abandon an attempt past this, retry
+    hedge_us: Optional[float] = None    # issue a duplicate read at this age
 
     def submission_us(self, n_reads: int) -> float:
         """Service time of one batched submission of `n_reads` device reads."""
@@ -532,8 +599,10 @@ class IOScheduler:
       submissions / demand_reads / prefetches / prefetch_hits -- diagnostics
     """
 
-    def __init__(self, cost: Optional[CostModel] = None):
+    def __init__(self, cost: Optional[CostModel] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.cost = cost if cost is not None else CostModel()
+        self.retry = retry if retry is not None else RetryPolicy()
         self.service_us = 0.0
         self.serial_us = 0.0
         self.submissions = 0
@@ -561,6 +630,14 @@ class IOScheduler:
 
         Accounting (NIO, cache state) is exactly what serial per-block
         `dev.read` calls would produce; only the timing differs.
+
+        When `dev.faults` is set, every demand miss runs the resilient read
+        loop (checksum verify, bounded retry with backoff, timeout, hedging
+        -- see `_read_resilient`); a block that cannot be delivered yields
+        the `READ_FAILED` sentinel in its slot instead of raising.  Wasted
+        attempts are charged as straggler time (they never overlap in the
+        qd pipeline) and counted in the device's `IOStats` resilience
+        fields; NIO and cache state still reflect only verified deliveries.
         """
         new_reads = 0
         payloads = []
@@ -569,8 +646,22 @@ class IOScheduler:
             b = int(b)
             key = (id(dev), b)
             was_cached = dev.cached(b)
-            payloads.append(dev.read(b))
+            if was_cached or dev.faults is None:
+                payload, ok, extra_us = dev.read(b), True, 0.0
+            else:
+                payload, ok, extra_us = self._read_resilient(dev, b)
+            payloads.append(payload)
+            if extra_us:
+                # retries/backoff/spikes are stragglers: they serialize in
+                # both timing views, preserving service_us <= serial_us
+                self.service_us += extra_us
+                self.serial_us += extra_us
             if was_cached:
+                continue
+            if not ok:
+                # nothing was delivered: no NIO, no queue slot occupied;
+                # the wasted attempts were charged above
+                self._inflight.discard(key)
                 continue
             self.demand_reads += 1
             # serial baseline: every miss is its own one-read submission
@@ -604,3 +695,73 @@ class IOScheduler:
             self.service_us += self.cost.submission_us(new_reads)
             self.submissions += 1
         return payloads
+
+    # --- resilient read (fault-injected devices only) ----------------------
+    _HEDGE_STREAM = 1 << 20  # attempt-index offset for hedge outcome draws
+
+    def _read_resilient(self, dev: BlockDevice, b: int):
+        """Resolve one demand miss under `dev.faults`.
+
+        Returns ``(payload, ok, extra_us)``.  `extra_us` is the straggler
+        time beyond the one base `read_us` the pipelined submission term
+        charges for a successful miss: wasted attempts (errors, timeouts,
+        torn transfers), backoff waits, and the hedge-capped remainder of a
+        latency spike.  On success the delivery is committed through the
+        plain `dev.read` (one NIO + cache fill), keeping accounting
+        identical to the clean path; on failure nothing touches the cache
+        or the NIO counters and `READ_FAILED` is returned.
+
+        With a zero-rate plan every attempt resolves clean with no spike,
+        so extra_us == 0 and the path is bit-identical to `dev.read`.
+        """
+        plan, cost, rp, st = dev.faults, self.cost, self.retry, dev.stats
+        extra = 0.0
+
+        def backoff(attempt: int) -> float:
+            if attempt >= rp.budget:
+                return 0.0  # budget exhausted: no further wait
+            st.retries += 1
+            return rp.backoff(attempt, plan.jitter(dev.kind, b, attempt))
+
+        for attempt in range(rp.budget + 1):
+            out = plan.outcome(dev.kind, b, attempt)
+            if out.error:
+                st.read_errors += 1
+                extra += cost.read_us + backoff(attempt)
+                continue
+            # data transferred; resolve its latency (spike, hedge, timeout)
+            lat = cost.read_us + out.spike_us
+            corrupt = out.corrupt
+            salt_attempt = attempt
+            if cost.hedge_us is not None and lat > cost.hedge_us + cost.read_us:
+                st.hedges += 1
+                hout = plan.outcome(dev.kind, b, self._HEDGE_STREAM + attempt)
+                if not hout.error:
+                    hlat = cost.hedge_us + cost.read_us + hout.spike_us
+                    if hlat < lat:   # the duplicate read wins the race
+                        st.hedge_wins += 1
+                        lat = hlat
+                        corrupt = hout.corrupt
+                        salt_attempt = self._HEDGE_STREAM + attempt
+            if cost.timeout_us is not None and lat > cost.timeout_us:
+                st.timeouts += 1
+                extra += cost.timeout_us + backoff(attempt)
+                continue
+            if corrupt:
+                # the checksum mechanism is load-bearing: really perturb the
+                # payload and let verification catch it
+                torn = dev.attempt_payload(
+                    b, True, plan.corruption_salt(dev.kind, b, salt_attempt))
+                if not dev.verify(b, torn):
+                    st.checksum_failures += 1
+                    extra += lat + backoff(attempt)
+                    continue
+                # payload had no bytes to tear (None placeholder): fall
+                # through as a clean delivery
+            # clean verified delivery: the base read_us is charged by the
+            # pipelined submission term; only the remainder is a straggler
+            extra += lat - cost.read_us
+            return dev.read(b), True, extra
+
+        st.failed_reads += 1
+        return READ_FAILED, False, extra

@@ -12,6 +12,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .io_sim import READ_FAILED
 from .pq import PQCodec
 from .storage import CoupledStorage, DecoupledStorage
 
@@ -29,6 +30,15 @@ class SearchResult:
     cache_hits: int = 0      # block-cache hits (reads that cost no I/O)
     service_us: float = 0.0  # pipelined I/O service time (qd-overlapped)
     serial_us: float = 0.0   # same demand misses read strictly serially
+    # degraded-result contract (fault injection): `degraded` is True iff at
+    # least one block this query needed could not be delivered, i.e. the
+    # returned top-k may be missing candidates the clean run would have
+    # seen.  All other fields stay exact for the reads that did happen.
+    degraded: bool = False
+    failed_reads: int = 0    # undeliverable blocks skipped by this query
+    retries: int = 0         # extra read attempts (transient faults)
+    hedges: int = 0          # duplicate reads raced against stragglers
+    checksum_failures: int = 0  # torn payloads caught and retried
 
 
 class _Pool:
@@ -108,6 +118,7 @@ def search_coupled(
 
     results: dict[int, float] = {}
     hops = 0
+    failed_blocks = 0
     while True:
         i = pool.first_unchecked()
         if i < 0 or (max_hops is not None and hops >= max_hops):
@@ -121,6 +132,11 @@ def search_coupled(
                                  lambda u: store.block_of(u),
                                  exclude={store.block_of(v)})
         rec = store.read_node_block(v, prefetch=pf)
+        if rec is READ_FAILED:
+            # degraded mode: the candidate's block is unreadable -- skip it
+            # (it stays checked) and keep expanding the rest of the pool
+            failed_blocks += 1
+            continue
         if block_level:
             # Starling: evaluate every node of the fetched block (free once
             # the block is resident): exact distances for residents, and
@@ -159,7 +175,9 @@ def search_coupled(
         ids=ids[o], dists=ds[o], nio=st.nio, graph_reads=st.graph_reads,
         vector_reads=st.vector_reads, n_dist=n_dist, n_pq=n_pq, hops=hops,
         cache_hits=st.cache_hits, service_us=sch.service_us,
-        serial_us=sch.serial_us)
+        serial_us=sch.serial_us, degraded=failed_blocks > 0,
+        failed_reads=failed_blocks, retries=st.retries, hedges=st.hedges,
+        checksum_failures=st.checksum_failures)
 
 
 def _prefetch_hints(pool: "_Pool", popped_i: int, width: int,
@@ -220,6 +238,12 @@ def search_bamg(
     bit-identical to the per-read path; only the modeled service time
     changes (see io_sim.IOScheduler).  `drop_cache=False` keeps the block
     cache warm across queries (`warm_cache` serving mode).
+
+    Degraded-result contract (fault injection): blocks that cannot be
+    delivered after retries are skipped -- the beam keeps walking, the
+    re-rank drops the affected candidates, and the result carries
+    ``degraded=True`` with ``failed_reads`` counting the skips.  The query
+    never crashes on an unreadable block.
     """
     store.reset(drop_cache=drop_cache)
     m_sub = adc_table.shape[0]
@@ -239,6 +263,7 @@ def search_bamg(
 
     explored: set[int] = set()     # nodes already BFS-expanded (per query)
     hops = 0
+    failed_blocks = 0
     while True:
         i = pool.first_unchecked()
         if i < 0 or (max_hops is not None and hops >= max_hops):
@@ -257,11 +282,20 @@ def search_bamg(
                 lambda u: store.gblock_of_oid(int(store.vid2oid[u])),
                 exclude={gb})
         blk = store.read_graph_block(gb, prefetch=pf)
+        if blk is READ_FAILED:
+            # degraded mode: skip the unreadable block, keep walking from
+            # the remaining pool candidates (v stays checked)
+            failed_blocks += 1
+            explored.add(v)
+            continue
         _search_within_block(store, blk, gb, v, pool, pq_dist, explored, alpha)
 
-    # refinement: load raw vectors for pool candidates, exact re-rank
+    # refinement: load raw vectors for pool candidates, exact re-rank.
+    # Under fault injection a candidate whose vector block is unreadable is
+    # dropped (None from the storage layer) -- partial top-k, never a crash.
     n_rerank = len(pool.ids) if rerank is None else min(rerank, len(pool.ids))
     exact: dict[int, float] = {}
+    failed_vecs = 0
     if rerank_margin is None:
         # paper-faithful: all candidates, read in OID order for contiguity;
         # in batched mode the whole read set goes down as one submission
@@ -269,6 +303,9 @@ def search_bamg(
         vecs = store.read_vectors([int(store.vid2oid[vv]) for vv in cand],
                                   batched=batch_submit is not None)
         for vv, vec in zip(cand, vecs):
+            if vec is None:
+                failed_vecs += 1
+                continue
             exact[vv] = _sqd(vec, q)
             n_dist += 1
     else:
@@ -279,6 +316,9 @@ def search_bamg(
             if len(worst_k) >= k and dpq > rerank_margin * (-worst_k[0]):
                 break
             vec = store.read_vector(int(store.vid2oid[vv]))
+            if vec is None:
+                failed_vecs += 1
+                continue
             dex = _sqd(vec, q)
             exact[vv] = dex
             n_dist += 1
@@ -292,11 +332,15 @@ def search_bamg(
     gs = store.graph_dev.stats
     vs = store.vector_dev.stats
     sch = store.scheduler
+    n_failed = failed_blocks + failed_vecs
     return SearchResult(
         ids=ids[o], dists=ds[o], nio=gs.nio + vs.nio, graph_reads=gs.graph_reads,
         vector_reads=vs.vector_reads, n_dist=n_dist, n_pq=n_pq, hops=hops,
         cache_hits=gs.cache_hits + vs.cache_hits,
-        service_us=sch.service_us, serial_us=sch.serial_us)
+        service_us=sch.service_us, serial_us=sch.serial_us,
+        degraded=n_failed > 0, failed_reads=n_failed,
+        retries=gs.retries + vs.retries, hedges=gs.hedges + vs.hedges,
+        checksum_failures=gs.checksum_failures + vs.checksum_failures)
 
 
 def _search_within_block(store, blk, gb, v, pool, pq_dist, explored, alpha):

@@ -23,7 +23,10 @@ import dataclasses
 
 import numpy as np
 
-from .io_sim import BLOCK_SIZE, BlockDevice, CachePolicy, CostModel, IOScheduler
+from repro.utils.faults import FaultPlan, RetryPolicy
+
+from .io_sim import (BLOCK_SIZE, READ_FAILED, BlockDevice, CachePolicy,
+                     CostModel, IOScheduler)
 
 
 # ---------------------------------------------------------------------------
@@ -42,7 +45,9 @@ class CoupledStorage:
     def __init__(self, x: np.ndarray, adj: np.ndarray, order: np.ndarray | None = None,
                  block_size: int = BLOCK_SIZE, cache_blocks: int = 256,
                  policy: str | CachePolicy = "lru",
-                 cost: CostModel | None = None):
+                 cost: CostModel | None = None,
+                 faults: FaultPlan | None = None,
+                 retry: RetryPolicy | None = None):
         n, d = x.shape
         r = adj.shape[1]
         self.n, self.d, self.r = n, d, r
@@ -80,8 +85,8 @@ class CoupledStorage:
             for _ in range(self.blocks_per_record - 1):
                 dev_blocks.append(None)
         self.device = BlockDevice(dev_blocks, block_size, cache_blocks,
-                                  kind="graph", policy=policy)
-        self.scheduler = IOScheduler(cost)
+                                  kind="graph", policy=policy, faults=faults)
+        self.scheduler = IOScheduler(cost, retry)
 
     @property
     def n_blocks(self) -> int:
@@ -99,7 +104,9 @@ class CoupledStorage:
 
         Multi-block records go down as one batched submission (their span is
         known up front); `prefetch` adds speculative logical-block hints
-        (timing only -- see io_sim.IOScheduler).
+        (timing only -- see io_sim.IOScheduler).  Under fault injection a
+        record any of whose span blocks could not be delivered is
+        `READ_FAILED` (the caller degrades, it does not crash).
         """
         b = self.block_of(vid)
         first = int(self._payload_block[b])
@@ -108,7 +115,10 @@ class CoupledStorage:
         for lb in prefetch:
             f = int(self._payload_block[lb])
             pf.extend(range(f, f + self.blocks_per_record))
-        return self.scheduler.submit(self.device, span, prefetch=pf)[0]
+        payloads = self.scheduler.submit(self.device, span, prefetch=pf)
+        if any(p is READ_FAILED for p in payloads):
+            return READ_FAILED
+        return payloads[0]
 
     def slot_in_block(self, vid: int) -> int:
         return int(self.pos[vid]) % self.npb
@@ -142,7 +152,9 @@ class DecoupledStorage:
                  cache_blocks: int = 256, vec_cache_blocks: int = 256,
                  policy: str | CachePolicy = "lru",
                  vec_policy: str | CachePolicy | None = None,
-                 pinned_gblocks=(), cost: CostModel | None = None):
+                 pinned_gblocks=(), cost: CostModel | None = None,
+                 faults: FaultPlan | None = None,
+                 retry: RetryPolicy | None = None):
         n, d = x.shape
         r = adj.shape[1]
         m, c = members.shape
@@ -181,8 +193,8 @@ class DecoupledStorage:
             payloads.append(GraphBlock(oids=oids, vids=vids, nbrs=nb))
         self.graph_dev = BlockDevice(payloads, block_size, cache_blocks,
                                      kind="graph", policy=policy,
-                                     pinned=pinned_gblocks)
-        self.scheduler = IOScheduler(cost)
+                                     pinned=pinned_gblocks, faults=faults)
+        self.scheduler = IOScheduler(cost, retry)
 
         # --- vector region ---------------------------------------------------
         self.vec_bytes = 4 * d
@@ -207,7 +219,8 @@ class DecoupledStorage:
                 vec_payloads.append(region[vb * floats_per_block: (vb + 1) * floats_per_block])
         self.vector_dev = BlockDevice(
             vec_payloads, block_size, vec_cache_blocks, kind="vector",
-            policy=vec_policy if vec_policy is not None else policy)
+            policy=vec_policy if vec_policy is not None else policy,
+            faults=faults)
 
     def _vec_offset_floats(self, slot: int, floats_per_block: int) -> int:
         """Float offset of slot's vector inside its graph block's region."""
@@ -222,7 +235,8 @@ class DecoupledStorage:
 
     def read_graph_block(self, gblock: int, prefetch=()) -> GraphBlock:
         """Fetch one graph block; `prefetch` hints further graph blocks for
-        the same batched submission (timing only, never accounting)."""
+        the same batched submission (timing only, never accounting).  Under
+        fault injection an undeliverable block is `READ_FAILED`."""
         return self.scheduler.submit(self.graph_dev, [gblock],
                                      prefetch=prefetch)[0]
 
@@ -234,8 +248,9 @@ class DecoupledStorage:
         first = b * self.vblocks_per_gblock + off // floats_per_block
         return first, off % floats_per_block
 
-    def read_vector(self, oid: int) -> np.ndarray:
-        """Fetch a raw vector by OID -- location computed, no map (§4.2)."""
+    def read_vector(self, oid: int) -> np.ndarray | None:
+        """Fetch a raw vector by OID -- location computed, no map (§4.2).
+        None when the block could not be delivered (fault injection)."""
         return self.read_vectors([oid], batched=False)[0]
 
     def read_vectors(self, oids, batched: bool = True) -> list[np.ndarray]:
@@ -246,6 +261,10 @@ class DecoupledStorage:
         front); `batched=False` submits them one by one.  Both produce the
         same reads in the same order, so NIO and cache state are identical
         -- only the modeled service time differs.
+
+        Under fault injection a vector any of whose blocks could not be
+        delivered comes back as None (the re-rank degrades per-candidate,
+        the other vectors of the batch are unaffected).
         """
         spans = [self._vec_block_span(int(o)) for o in oids]
         nb = self.vblocks_per_vec
@@ -259,9 +278,12 @@ class DecoupledStorage:
             for first, _ in spans:
                 for vb in range(first, first + nb):
                     payloads.append(self.scheduler.read(self.vector_dev, vb))
-        out: list[np.ndarray] = []
+        out: list[np.ndarray | None] = []
         for i, (_, local) in enumerate(spans):
             chunks = payloads[i * nb: (i + 1) * nb]
+            if any(c is READ_FAILED for c in chunks):
+                out.append(None)
+                continue
             flat = np.concatenate(chunks) if nb > 1 else chunks[0]
             out.append(flat[local: local + self.d])
         return out

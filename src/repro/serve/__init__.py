@@ -8,11 +8,18 @@ Two pieces:
   beam expansion with masked gathers over the padded adjacency matrix, and
   exact re-rank through `l2_topk_rowwise`.
 - `frontend.ShardedFrontend` -- scatter-gather over S independent
-  sub-indexes: one batched engine call per shard, one global top-k merge.
+  sub-indexes: one batched engine call per shard, one global top-k merge;
+  shards that die are skipped (degraded mode) and tracked by `health()`.
+- `deploy.DeploymentManager` / `deploy.BlueGreenEngine` -- versioned
+  checksummed index builds with an atomic ACTIVE pointer: publish ->
+  verify -> validate (recall smoke) -> promote, plus rollback; the engine
+  hot-swaps on `refresh()` without ever serving a partial index.
 
 Everything is fixed-shape so a (batch, k) signature compiles once and is
 reused for the lifetime of the server; see `ann_engine` for the shape
 contract.
 """
 from .ann_engine import BatchedANNEngine, EngineConfig  # noqa: F401
-from .frontend import ShardedFrontend  # noqa: F401
+from .deploy import (BlueGreenEngine, DeploymentManager,  # noqa: F401
+                     IndexManifest)
+from .frontend import ServeStatus, ShardedFrontend, ShardHealth  # noqa: F401

@@ -169,6 +169,7 @@ class BatchedANNEngine:
         self._l = l
         self._rerank = min(config.rerank if config.rerank is not None else l, l)
         self._n_entry = min(config.n_entry, len(cands))
+        self._fault: Optional[Exception] = None
 
     @classmethod
     def from_index(cls, idx, config: EngineConfig = EngineConfig()):
@@ -180,8 +181,24 @@ class BatchedANNEngine:
         """Largest k this engine can serve (pool prefix reranked exactly)."""
         return self._rerank
 
+    @property
+    def healthy(self) -> bool:
+        return self._fault is None
+
+    def inject_fault(self, exc: Optional[Exception] = None) -> None:
+        """Fault hook: every subsequent `search_batch` raises (dead shard)
+        until `heal()` -- lets the sharded front-end's degraded-mode path be
+        exercised without a real device failure."""
+        self._fault = exc if exc is not None else RuntimeError(
+            "injected engine fault")
+
+    def heal(self) -> None:
+        self._fault = None
+
     def search_batch(self, queries: np.ndarray, k: int):
         """queries (B, D) -> (ids (B, k) int64 with -1 pad, dists (B, k))."""
+        if self._fault is not None:
+            raise self._fault
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         if q.shape[1] != self.d:
             raise ValueError(f"query dim {q.shape[1]} != corpus dim {self.d}")

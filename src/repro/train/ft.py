@@ -24,6 +24,15 @@ At 1000+ nodes the relevant failure modes and this framework's answers:
 `run_with_recovery` drives a training loop with optional injected failures
 (used by tests to prove restart-equivalence: a run killed at step k and
 resumed matches the uninterrupted run bit-for-bit on CPU).
+
+Failure injection shares `repro.utils.faults` with the storage simulator:
+`SimulatedFailure` is the training face of that taxonomy, and a seeded
+`FaultPlan` (``FaultSpec(step_fail_rate=...)``) can drive probabilistic
+step crashes the same deterministic way the I/O layer draws read errors --
+one seed reproduces an entire run's failure schedule.  Transient semantics
+come from the plan's per-attempt draw: a step that failed on attempt 0 is
+re-drawn under the restart's attempt number, so a retried run makes
+progress exactly like a retried block read.
 """
 from __future__ import annotations
 
@@ -34,11 +43,10 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.utils.faults import (FaultPlan, InjectedFault,  # noqa: F401
+                                SimulatedFailure)
+
 from . import checkpoint as ckpt
-
-
-class SimulatedFailure(Exception):
-    pass
 
 
 @dataclasses.dataclass
@@ -51,9 +59,13 @@ class FTConfig:
 
 def run_loop(state, step_fn: Callable, batch_fn: Callable, n_steps: int,
              ft: FTConfig, fail_at: Optional[int] = None,
+             fault_plan: Optional[FaultPlan] = None, fault_attempt: int = 0,
              log_every: int = 0) -> tuple[Any, list]:
     """Run from state["step"] to n_steps, checkpointing; optionally raise a
-    SimulatedFailure after completing step `fail_at` (before its save)."""
+    SimulatedFailure after completing step `fail_at` (before its save), or
+    wherever the seeded `fault_plan` draws a step failure
+    (`FaultSpec.step_fail_rate`; `fault_attempt` is the restart count, so
+    transient failures clear on retry)."""
     saver = ckpt.AsyncCheckpointer(ft.ckpt_dir, keep=ft.keep)
     metrics_log = []
     start = int(state["step"])
@@ -69,6 +81,9 @@ def run_loop(state, step_fn: Callable, batch_fn: Callable, n_steps: int,
         ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt  # straggler probe
         if fail_at is not None and s + 1 == fail_at:
             raise SimulatedFailure(f"injected failure after step {s + 1}")
+        if fault_plan is not None and fault_plan.fail_step(s + 1, fault_attempt):
+            raise SimulatedFailure(
+                f"planned failure after step {s + 1} (attempt {fault_attempt})")
         if (s + 1) % ft.ckpt_every == 0 or s + 1 == n_steps:
             if ft.async_save:
                 saver.save(s + 1, state)
@@ -94,18 +109,25 @@ def resume_or_init(init_fn: Callable[[], Any], ft: FTConfig,
 
 
 def run_with_recovery(init_fn, step_fn, batch_fn, n_steps, ft: FTConfig,
-                      fail_at: Optional[int] = None, max_restarts: int = 3):
-    """Training with automatic restart-from-checkpoint on failure."""
+                      fail_at: Optional[int] = None,
+                      fault_plan: Optional[FaultPlan] = None,
+                      max_restarts: int = 3):
+    """Training with automatic restart-from-checkpoint on failure.
+
+    The restart count is fed back into the fault plan as the attempt
+    number, so a plan's transient step failures are re-drawn on retry
+    (persistent bad luck still exhausts `max_restarts` and re-raises)."""
     attempts = 0
     logs = []
     while True:
         state = resume_or_init(init_fn, ft)
         try:
             state, mlog = run_loop(state, step_fn, batch_fn, n_steps, ft,
-                                   fail_at=fail_at)
+                                   fail_at=fail_at, fault_plan=fault_plan,
+                                   fault_attempt=attempts)
             logs.extend(mlog)
             return state, logs, attempts
-        except SimulatedFailure:
+        except InjectedFault:
             attempts += 1
             fail_at = None  # fail only once per run_with_recovery call
             if attempts > max_restarts:

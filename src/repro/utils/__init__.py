@@ -1,1 +1,1 @@
-from . import sharding, tree  # noqa: F401
+from . import faults, sharding, tree  # noqa: F401
