@@ -19,7 +19,16 @@ Resilience rows (degraded-mode serving + blue/green deploy):
   serve.deploy.*       full blue/green round-trip on a temp root:
                        publish -> validate -> promote -> hot swap ->
                        rollback, serving correct top-k at every stage.
+
+`run_load_sweep` (registered as `load_sweep` in run.py) drives the
+distributed runtime through the continuous-batching scheduler under an
+open-loop arrival process: offered QPS x SLO -> achieved p50/p99, recall,
+deadline-hit and degraded/shrunk fractions per load point.  Acceptance
+(asserted): at the lowest offered load the deadline scheduler holds the
+configured p99 SLO and recall matches the unscheduled runtime path.
+Knobs: REPRO_BENCH_QPS_GRID, REPRO_BENCH_SLO_MS, REPRO_BENCH_LOAD_REQS.
 """
+import os
 import tempfile
 import time
 
@@ -28,8 +37,10 @@ import numpy as np
 from . import common
 from repro.core.distances import recall_at_k
 from repro.core.engine import BAMGParams
-from repro.serve import (BatchedANNEngine, BlueGreenEngine,
-                         DeploymentManager, EngineConfig, ShardedFrontend)
+from repro.serve import (BatchedANNEngine, BeamTier, BlueGreenEngine,
+                         DeploymentManager, EngineConfig, Scheduler,
+                         SchedulerConfig, ServeRuntime, ShardedFrontend,
+                         make_requests, summarize)
 
 K = 10
 L = 48
@@ -151,5 +162,55 @@ def run() -> None:
                     f"active={dm.active()};bit_identical=1")
 
 
+def run_load_sweep() -> None:
+    """Offered QPS x SLO -> achieved p50/p99, recall, degraded fraction.
+
+    Open-loop arrivals through the continuous-batching scheduler on a
+    3-shard ServeRuntime.  Asserted at the lowest grid point: p99 holds
+    the SLO and recall matches the unscheduled runtime path (within 2pp;
+    shrunk beams may legitimately trade recall at higher loads)."""
+    regime = "sift-like"
+    ds = common.dataset(regime)
+    qps_grid = sorted(float(v) for v in os.environ.get(
+        "REPRO_BENCH_QPS_GRID", "50,200,800").split(","))
+    slo = float(os.environ.get("REPRO_BENCH_SLO_MS", "500")) / 1e3
+    n_reqs = int(os.environ.get("REPRO_BENCH_LOAD_REQS", "192"))
+
+    rt = ServeRuntime.build(ds.base, n_shards=3,
+                            params=BAMGParams(r=16, l_build=32, seed=0),
+                            config=EngineConfig(l=L, max_hops=32))
+    ref_ids, _ = rt.serve_batch(ds.queries, K)
+    ref_rec = recall_at_k(ref_ids, ds.gt, K)
+    common.emit("serve.load.unscheduled.recall", round(ref_rec, 3),
+                f"shards=3;l={L}")
+
+    sched = Scheduler(rt, SchedulerConfig(
+        k=K, max_batch=32, slo=slo,
+        tiers=(BeamTier(), BeamTier(l=16, max_hops=8))))
+    nq = len(ds.queries)
+    gt = np.tile(ds.gt, (-(-n_reqs // nq), 1))[:n_reqs]
+    for qi, qps in enumerate(qps_grid):
+        reqs = make_requests(ds.queries, qps=qps, slo=slo, n=n_reqs, seed=qi)
+        done = sched.run(reqs)
+        s = summarize(done)
+        ids = np.stack([c.ids for c in done])   # sorted by rid = query order
+        rec = recall_at_k(ids, gt, K)
+        common.emit(f"serve.load.qps{qps:g}.p99_ms", round(s["p99_ms"], 2),
+                    f"p50_ms={s['p50_ms']:.2f};recall={rec:.3f};"
+                    f"deadline_hit={s['deadline_hit']:.2f};"
+                    f"degraded_frac={s['degraded_frac']:.2f};"
+                    f"shrunk_frac={s['shrunk_frac']:.2f};"
+                    f"achieved_qps={s['achieved_qps']:.1f};"
+                    f"slo_ms={slo * 1e3:g}")
+        if qi == 0:
+            assert s["p99_ms"] <= slo * 1e3, \
+                (f"lowest load ({qps:g} qps): p99 {s['p99_ms']:.1f}ms "
+                 f"blew the {slo * 1e3:g}ms SLO")
+            assert rec >= ref_rec - 0.02, \
+                (f"lowest load ({qps:g} qps): scheduled recall {rec:.3f} "
+                 f"fell below unscheduled {ref_rec:.3f}")
+
+
 if __name__ == "__main__":
     run()
+    run_load_sweep()

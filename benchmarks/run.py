@@ -34,6 +34,9 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
         ("serve", bench_serve.run),
+        # named without "serve" so `--only serve` (substring match) does
+        # not double-run the sweep alongside the serve suite
+        ("load_sweep", bench_serve.run_load_sweep),
     ]
     only = [s for s in args.only.split(",") if s]
     print("name,value,derived")

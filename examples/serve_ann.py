@@ -10,6 +10,11 @@ rebuild only the moved partitions); a query batch fans out as ONE batched
 global top-k in a single pass -- the TPU analogue of the paper's "every
 I/O pays for itself", with per-query Python overhead amortized over the
 whole batch.  The old per-query host loop is kept as the baseline.
+
+Since the runtime refactor the fan-out is a *compiled instruction stream*
+(SCATTER / RUN / GATHER / MERGE) interpreted over a placed shard fleet;
+the tail of this demo prints the program and drives the continuous-
+batching scheduler over an open-loop arrival timeline (p50/p99 vs SLO).
 """
 import os
 import sys
@@ -22,7 +27,9 @@ import numpy as np  # noqa: E402
 from repro.core.distances import recall_at_k  # noqa: E402
 from repro.core.engine import BAMGParams  # noqa: E402
 from repro.data.synthetic import make_vector_dataset  # noqa: E402
-from repro.serve import EngineConfig, ShardedFrontend  # noqa: E402
+from repro.serve import (EngineConfig, Scheduler,  # noqa: E402
+                         SchedulerConfig, ShardedFrontend, make_requests,
+                         summarize)
 
 
 def main() -> None:
@@ -66,6 +73,23 @@ def main() -> None:
           f"NIO/query (summed over shards)={nio/n_q:.1f}, "
           f"{host_s/n_q*1e3:.1f} ms/query -> batched speedup "
           f"{host_s/batched_s:.1f}x")
+
+    # --- the runtime underneath: compiled program + request scheduler ------
+    rt = frontend.runtime
+    prog = " ".join(f"{ins.op.name}({ins.shard})" if ins.shard >= 0
+                    else ins.op.name for ins in rt.program)
+    print(f"\ncompiled serving program ({rt.n_shards} shards, "
+          f"{rt.health()['n_workers']} worker(s)): {prog}")
+
+    slo = 0.5
+    sched = Scheduler(rt, SchedulerConfig(k=k, max_batch=16, slo=slo))
+    reqs = make_requests(ds.queries, qps=100.0, slo=slo, n=96, seed=0)
+    s = summarize(sched.run(reqs))
+    print(f"scheduler @100 qps offered, SLO={slo*1e3:.0f}ms: "
+          f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "
+          f"deadline_hit={s['deadline_hit']:.2f} "
+          f"shrunk_frac={s['shrunk_frac']:.2f} "
+          f"({s['achieved_qps']:.0f} qps achieved)")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,29 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1, data: int | None = None):
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small mesh over whatever devices exist (tests / examples).
+
+    The factorization is validated up front: `model` larger than the
+    device count used to silently derive a 0-sized data axis
+    (`data = n // model`), surfacing later as an opaque mesh-shape error.
+    """
     n = len(jax.devices())
-    data = data if data is not None else n // model
+    if model < 1:
+        raise ValueError(f"make_host_mesh: model={model}; axis sizes must "
+                         f"be >= 1")
+    if model > n:
+        raise ValueError(
+            f"make_host_mesh: model={model} exceeds the {n} available "
+            f"device(s) -- the derived data axis n // model would be "
+            f"zero-sized.  Shrink model or launch with more devices "
+            f"(e.g. XLA_FLAGS=--xla_force_host_platform_device_count=N).")
+    if data is None:
+        data = n // model
+    if data < 1:
+        raise ValueError(f"make_host_mesh: data={data}; axis sizes must "
+                         f"be >= 1")
+    if data * model > n:
+        raise ValueError(
+            f"make_host_mesh: a ({data}, {model}) mesh needs "
+            f"{data * model} devices but only {n} exist")
     return make_mesh_compat((data, model), ("data", "model"))

@@ -1,15 +1,22 @@
 """TPU-native batched serving layer for BAMG (fixed-shape, jit-compiled).
 
-Two pieces:
+Four pieces:
 
 - `ann_engine.BatchedANNEngine` -- whole-batch beam search over one BAMG
   sub-index: batched ADC entry scoring through the `pq_adc` kernel, a
   `(B, L)` candidate pool maintained by vectorized insert-sort, fixed-hop
   beam expansion with masked gathers over the padded adjacency matrix, and
   exact re-rank through `l2_topk_rowwise`.
-- `frontend.ShardedFrontend` -- scatter-gather over S independent
-  sub-indexes: one batched engine call per shard, one global top-k merge;
-  shards that die are skipped (degraded mode) and tracked by `health()`.
+- `runtime.ServeRuntime` -- the distributed mesh serving runtime: shard
+  replica groups placed onto `repro.launch.mesh` workers
+  (`ShardPlacement`/`MeshWorker`), a static SCATTER/RUN/GATHER/MERGE
+  instruction stream compiled per fleet topology, and a
+  continuous-batching `Scheduler` (open-loop arrivals, EDF micro-batches,
+  per-query adaptive beam width against a p99 SLO).
+- `frontend.ShardedFrontend` -- thin compatibility shim over the runtime:
+  the legacy scatter-gather API, bit-identical answers, served through
+  the instruction stream; dead shards are masked (degraded mode) and
+  tracked by `health()`.
 - `deploy.DeploymentManager` / `deploy.BlueGreenEngine` -- versioned
   checksummed index builds with an atomic ACTIVE pointer: publish ->
   verify -> validate (recall smoke) -> promote, plus rollback; the engine
@@ -17,9 +24,13 @@ Two pieces:
 
 Everything is fixed-shape so a (batch, k) signature compiles once and is
 reused for the lifetime of the server; see `ann_engine` for the shape
-contract.
+contract and `runtime.scheduler` for how micro-batches are padded to it.
 """
 from .ann_engine import BatchedANNEngine, EngineConfig  # noqa: F401
 from .deploy import (BlueGreenEngine, DeploymentManager,  # noqa: F401
                      IndexManifest)
 from .frontend import ServeStatus, ShardedFrontend, ShardHealth  # noqa: F401
+from .runtime import (BeamTier, Completion, Request,  # noqa: F401
+                      RequestQueue, Scheduler, SchedulerConfig,
+                      ServeRuntime, build_shard_fleet, make_requests,
+                      open_loop_arrivals, summarize)

@@ -41,6 +41,7 @@ an exhaustive configuration (see tests/test_serve_engine.py).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import functools
 from typing import Optional
@@ -155,8 +156,12 @@ class BatchedANNEngine:
     the device round-trip and compilation cache are keyed on (B, D, k).
     """
 
-    def __init__(self, arrays: dict, config: EngineConfig = EngineConfig()):
-        self.config = config
+    # arrays moved between mesh devices by place()/replicate()
+    _ARRAY_ATTRS = ("x", "adj", "codes", "codebooks", "entry_cands",
+                    "entry_codes")
+
+    def __init__(self, arrays: dict, config: Optional[EngineConfig] = None):
+        self.config = config = config if config is not None else EngineConfig()
         self.n, self.d = arrays["x"].shape
         cands = np.asarray(arrays["entry_cands"], np.int64)
         self.x = jnp.asarray(arrays["x"], jnp.float32)
@@ -172,7 +177,8 @@ class BatchedANNEngine:
         self._fault: Optional[Exception] = None
 
     @classmethod
-    def from_index(cls, idx, config: EngineConfig = EngineConfig()):
+    def from_index(cls, idx, config: Optional[EngineConfig] = None):
+        config = config if config is not None else EngineConfig()
         return cls(idx.batch_arrays(n_entry_cands=config.n_entry_cands),
                    config)
 
@@ -180,6 +186,30 @@ class BatchedANNEngine:
     def rerank_capacity(self) -> int:
         """Largest k this engine can serve (pool prefix reranked exactly)."""
         return self._rerank
+
+    def effective_rerank(self, l: Optional[int] = None) -> int:
+        """Rerank capacity under an optional per-call pool override `l`."""
+        if l is None:
+            return self._rerank
+        return min(self._rerank, max(1, min(int(l), self.n)))
+
+    def place(self, device) -> "BatchedANNEngine":
+        """device_put this engine's arrays onto `device`, in place.
+
+        Identity is preserved so fault hooks (`inject_fault`) and the
+        sharded front-end keep pointing at the served engine."""
+        for a in self._ARRAY_ATTRS:
+            setattr(self, a, jax.device_put(getattr(self, a), device))
+        return self
+
+    def replicate(self, device) -> "BatchedANNEngine":
+        """A copy of this engine with its arrays device_put onto `device`.
+
+        Used for the extra replicas of a shard's replica group; fault
+        state is not shared with the original."""
+        new = copy.copy(self)
+        new._fault = None
+        return new.place(device)
 
     @property
     def healthy(self) -> bool:
@@ -195,22 +225,35 @@ class BatchedANNEngine:
     def heal(self) -> None:
         self._fault = None
 
-    def search_batch(self, queries: np.ndarray, k: int):
-        """queries (B, D) -> (ids (B, k) int64 with -1 pad, dists (B, k))."""
+    def search_batch(self, queries: np.ndarray, k: int, *,
+                     l: Optional[int] = None, max_hops: Optional[int] = None):
+        """queries (B, D) -> (ids (B, k) int64 with -1 pad, dists (B, k)).
+
+        `l` / `max_hops` optionally shrink the pool / hop budget for this
+        call (adaptive beam width under a latency SLO -- see
+        `repro.serve.runtime.scheduler`).  Both are static jit arguments,
+        so each distinct override compiles once and is cached like any
+        other shape; defaults reproduce the configured beam exactly.
+        """
         if self._fault is not None:
             raise self._fault
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         if q.shape[1] != self.d:
             raise ValueError(f"query dim {q.shape[1]} != corpus dim {self.d}")
-        if k > self._rerank:
+        l_eff = self._l if l is None else max(1, min(int(l), self.n))
+        rerank = self.effective_rerank(l)
+        hops = (self.config.max_hops if max_hops is None
+                else max(1, int(max_hops)))
+        if k > rerank:
             raise ValueError(
-                f"k={k} exceeds the rerank capacity {self._rerank}; raise "
-                f"EngineConfig.l/rerank (fixed at engine construction)")
+                f"k={k} exceeds the rerank capacity {rerank}; raise "
+                f"EngineConfig.l/rerank (fixed at engine construction) or "
+                f"the per-call l override")
         ids, dists, _ = batched_search(
             self.x, self.adj, self.codes, self.codebooks, self.entry_cands,
-            self.entry_codes, q, k=k, l=self._l,
-            max_hops=self.config.max_hops, n_entry=self._n_entry,
-            rerank=self._rerank, backend=self.config.backend)
+            self.entry_codes, q, k=k, l=l_eff,
+            max_hops=hops, n_entry=self._n_entry,
+            rerank=rerank, backend=self.config.backend)
         return np.asarray(ids, np.int64), np.asarray(dists)
 
     def memory_bytes(self) -> int:

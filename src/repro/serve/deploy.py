@@ -191,7 +191,7 @@ class DeploymentManager:
     # --- validate / full lifecycle ------------------------------------------
     def validate(self, build_id: str, queries: np.ndarray, gt: np.ndarray,
                  k: int = 10, min_recall: float = 0.8,
-                 config: EngineConfig = EngineConfig()) -> float:
+                 config: Optional[EngineConfig] = None) -> float:
         """Recall smoke test of a published build against a golden set.
 
         Returns the measured recall; raises ValueError below `min_recall`."""
@@ -207,7 +207,7 @@ class DeploymentManager:
     def deploy(self, x: np.ndarray, build_id: str, queries: np.ndarray,
                gt: np.ndarray, params: Optional[BAMGParams] = None,
                k: int = 10, min_recall: float = 0.8,
-               config: EngineConfig = EngineConfig(),
+               config: Optional[EngineConfig] = None,
                meta: Optional[dict] = None) -> IndexManifest:
         """Full lifecycle: build -> publish -> verify -> validate -> promote.
 
@@ -232,9 +232,9 @@ class BlueGreenEngine:
     uses green."""
 
     def __init__(self, manager: DeploymentManager,
-                 config: EngineConfig = EngineConfig()):
+                 config: Optional[EngineConfig] = None):
         self.manager = manager
-        self.config = config
+        self.config = config if config is not None else EngineConfig()
         self.build_id: Optional[str] = None
         self._engine: Optional[BatchedANNEngine] = None
         self.refresh()

@@ -1,4 +1,12 @@
-"""Sharded scatter-gather serving front-end.
+"""Sharded scatter-gather serving front-end (compatibility shim).
+
+Historically this module *was* the serving layer: a single-process Python
+loop over sub-index engines.  That loop now lives in
+`repro.serve.runtime` as a placed, instruction-stream runtime
+(`ServeRuntime`: ShardPlacement -> SCATTER/RUN/GATHER/MERGE ->
+deadline scheduler); `ShardedFrontend` survives as a thin shim so every
+existing caller -- and every existing test -- exercises the new path with
+the old API and bit-identical results.
 
 The corpus is partitioned into S sub-corpora; each shard owns an
 independently built BAMG sub-index wrapped in a `BatchedANNEngine`
@@ -7,179 +15,103 @@ A query batch makes ONE batched engine call per shard -- not a Python loop
 over queries -- and the per-shard local top-k are mapped to global ids and
 merged with a single top-k pass.
 
-Degraded mode: a shard whose engine raises is marked down and skipped --
-the merge proceeds over the surviving shards and the answer is a partial
-top-k (flagged via `ServeStatus.degraded` when
-`search_batch(..., with_status=True)`).  `health()` snapshots per-shard
-state; `mark_up()` restores a shard after repair (e.g. a blue/green
-re-deploy of the failed sub-index).
+Degraded mode: a shard whose engine raises is marked down and its
+RUN/GATHER instructions masked -- the merge proceeds over the surviving
+shards and the answer is a partial top-k (flagged via
+`ServeStatus.degraded` when `search_batch(..., with_status=True)`).
+`health()` snapshots per-shard state; `mark_up()` restores a shard after
+repair (e.g. a blue/green re-deploy of the failed sub-index).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.engine import BAMGIndex, BAMGParams
+
 from .ann_engine import BatchedANNEngine, EngineConfig
-
-
-@dataclasses.dataclass
-class ShardHealth:
-    """Mutable per-shard serving state (one entry per engine)."""
-    up: bool = True
-    errors: int = 0          # engine calls that raised
-    last_error: str = ""
-
-
-@dataclasses.dataclass
-class ServeStatus:
-    """Per-batch serving report returned by `with_status=True`."""
-    degraded: np.ndarray                 # (B,) bool: answer missed >=1 shard
-    shards_up: int
-    shards_down: tuple                   # shard indices skipped this batch
+from .runtime import ServeRuntime, ServeStatus, ShardHealth  # noqa: F401
+from .runtime import build_shard_fleet
+# legacy private names, still imported by tests and benchmarks
+from .runtime.instructions import merge_topk as _merge_topk  # noqa: F401
+from .runtime.instructions import pad_cols as _pad_cols  # noqa: F401
 
 
 class ShardedFrontend:
     """Scatter-gather over S `BatchedANNEngine` sub-indexes.
 
     `shard_vids[s]` maps shard-local row ids back to global corpus ids.
+    All serving flows through a `ServeRuntime` (the compiled instruction
+    stream); this class only adapts the legacy constructor/attribute
+    surface.  Pass `mesh` / `n_replicas` to place the fleet on a device
+    mesh with replicated shards.
     """
 
     def __init__(self, shard_vids: Sequence[np.ndarray],
                  engines: Sequence[BatchedANNEngine],
-                 host_indexes: Optional[Sequence[BAMGIndex]] = None):
-        assert len(shard_vids) == len(engines)
-        self.shard_vids = [np.asarray(v, np.int64) for v in shard_vids]
-        self.engines = list(engines)
-        # host BAMGIndex per shard (comparisons / persistence); None when
-        # the frontend was assembled from bare engine arrays
-        self.host_indexes = list(host_indexes) if host_indexes else None
-        # -1 (absent) local ids pass through as global -1 via a sentinel row
-        self._lut = [np.concatenate([v, [-1]]) for v in self.shard_vids]
-        self._health = [ShardHealth() for _ in self.engines]
+                 host_indexes: Optional[Sequence[BAMGIndex]] = None,
+                 mesh=None, n_replicas: int = 1):
+        self.runtime = ServeRuntime(shard_vids, engines,
+                                    host_indexes=host_indexes,
+                                    mesh=mesh, n_replicas=n_replicas)
 
     @classmethod
     def build(cls, x: np.ndarray, n_shards: int,
               params: Optional[BAMGParams] = None,
-              config: EngineConfig = EngineConfig()) -> "ShardedFrontend":
+              config: Optional[EngineConfig] = None) -> "ShardedFrontend":
         """Round-robin partition + per-shard BAMG build."""
-        params = params or BAMGParams()
-        owner = np.arange(len(x)) % n_shards
-        vids, engines, indexes = [], [], []
-        if len(x) < 3 * n_shards:
-            raise ValueError(
-                f"n_shards={n_shards} leaves <3 points per shard for a "
-                f"{len(x)}-point corpus; a graph sub-index needs >=3 points")
-        for s in range(n_shards):
-            ids = np.nonzero(owner == s)[0]
-            ns = len(ids)
-            # small shards: graph-build degree/knn params cannot exceed n-1
-            # (same clamp as navgraph's recursive layer builds)
-            p = dataclasses.replace(
-                params, seed=s, r=min(params.r, ns - 1),
-                knn_k=min(params.knn_k, ns - 1),
-                l_build=min(params.l_build, max(4, ns)))
-            idx = BAMGIndex.build(x[ids], p)
-            vids.append(ids)
-            indexes.append(idx)
-            engines.append(BatchedANNEngine.from_index(idx, config))
+        vids, engines, indexes = build_shard_fleet(x, n_shards,
+                                                   params=params,
+                                                   config=config)
         return cls(vids, engines, host_indexes=indexes)
+
+    # --- legacy attribute surface (delegates to the runtime) ----------------
+    @property
+    def shard_vids(self) -> list[np.ndarray]:
+        return self.runtime.shard_vids
+
+    @property
+    def engines(self) -> list[BatchedANNEngine]:
+        return self.runtime.engines
+
+    @property
+    def host_indexes(self):
+        return self.runtime.host_indexes
+
+    @property
+    def _lut(self) -> list[np.ndarray]:
+        return self.runtime._lut
+
+    @property
+    def _health(self) -> list[ShardHealth]:
+        return self.runtime.placement.shard_health
 
     @property
     def n_shards(self) -> int:
-        return len(self.engines)
+        return self.runtime.n_shards
 
     # --- shard health -------------------------------------------------------
     def mark_down(self, shard: int, reason: str = "marked down") -> None:
-        h = self._health[shard]
-        h.up, h.last_error = False, reason
+        self.runtime.mark_down(shard, reason)
 
     def mark_up(self, shard: int) -> None:
-        self._health[shard].up = True
+        self.runtime.mark_up(shard)
 
     def health(self) -> dict:
         """Snapshot: overall up/down counts plus per-shard state."""
-        down = [s for s, h in enumerate(self._health) if not h.up]
-        return {"n_shards": self.n_shards,
-                "shards_up": self.n_shards - len(down),
-                "shards_down": down,
-                "per_shard": [dataclasses.asdict(h) for h in self._health]}
+        return self.runtime.health()
 
     def search_batch(self, queries: np.ndarray, k: int,
                      with_status: bool = False):
         """(B, D) queries -> global (ids (B, k) int64, dists (B, k)).
 
-        Scatter: one batched call per shard.  Gather: map local->global ids
-        and merge the (B, S*k) candidates with a single top-k.
-
-        A shard that is marked down -- or whose engine raises during the
-        scatter -- is skipped and auto-marked down; the merge runs over the
-        surviving shards (skip-and-continue, never crash).  With every shard
-        down the answer is all -1/+inf.  `with_status=True` additionally
-        returns a `ServeStatus` whose `degraded` flags mark answers that
-        missed at least one shard.
+        One walk of the runtime's compiled program: scatter, one batched
+        call per live shard, local->global gather, single top-k merge.
+        Marked-down shards are skipped by instruction masking; a shard
+        whose engine raises is auto-marked down (skip-and-continue, never
+        crash).  With every shard down the answer is all -1/+inf.
+        `with_status=True` additionally returns a `ServeStatus` whose
+        `degraded` flags mark answers that missed at least one shard.
         """
-        queries = np.atleast_2d(queries)
-        b = len(queries)
-        all_ids, all_d, down = [], [], []
-        for s, (lut, eng) in enumerate(zip(self._lut, self.engines)):
-            if not self._health[s].up:
-                down.append(s)
-                continue
-            # a shard smaller than k contributes what it has, padded --
-            # the global merge still sees plenty from the other shards
-            ks = min(k, eng.rerank_capacity)
-            try:
-                ids_s, d_s = eng.search_batch(queries, ks)  # (B, ks) local
-            except Exception as e:  # dead shard: degrade, don't crash
-                h = self._health[s]
-                h.up, h.errors, h.last_error = False, h.errors + 1, repr(e)
-                down.append(s)
-                continue
-            if ks < k:
-                ids_s = np.concatenate(
-                    [ids_s, np.full((b, k - ks), -1, ids_s.dtype)], axis=1)
-                d_s = np.concatenate(
-                    [d_s, np.full((b, k - ks), np.inf, d_s.dtype)], axis=1)
-            all_ids.append(lut[ids_s])                     # -1 -> global -1
-            all_d.append(d_s)
-        if all_ids:
-            ids = np.concatenate(all_ids, axis=1)          # (B, S*k)
-            d = np.concatenate(all_d, axis=1)
-        else:                                              # every shard down
-            ids = np.full((b, k), -1, np.int64)
-            d = np.full((b, k), np.inf, np.float64)
-        gd, gi = _merge_topk(d, k)
-        ids = _pad_cols(ids, k, -1)                        # match merge pad
-        gids = np.take_along_axis(ids, gi, axis=1)
-        gids = np.where(np.isfinite(gd), gids, -1)
-        if not with_status:
-            return gids, gd
-        status = ServeStatus(
-            degraded=np.full(b, bool(down)),
-            shards_up=self.n_shards - len(down), shards_down=tuple(down))
-        return gids, gd, status
-
-
-def _pad_cols(a: np.ndarray, k: int, fill) -> np.ndarray:
-    """Pad (B, C) to at least k columns with `fill` (no-op when C >= k)."""
-    if a.shape[1] >= k:
-        return a
-    pad = np.full((a.shape[0], k - a.shape[1]), fill, a.dtype)
-    return np.concatenate([a, pad], axis=1)
-
-
-def _merge_topk(dists: np.ndarray, k: int):
-    """Host-side (B, C) -> ascending (B, k); tiny, so plain numpy.
-
-    C is normally S*k but can drop below k when shards are down or the
-    fleet is small -- pad with +inf so argpartition's kth stays in range
-    (the caller pads its id matrix the same way).
-    """
-    dists = _pad_cols(dists, k, np.inf)
-    part = np.argpartition(dists, k - 1, axis=1)[:, :k]
-    pd = np.take_along_axis(dists, part, axis=1)
-    o = np.argsort(pd, axis=1, kind="stable")
-    return np.take_along_axis(pd, o, axis=1), np.take_along_axis(part, o, axis=1)
+        return self.runtime.serve_batch(queries, k, with_status=with_status)
