@@ -1,0 +1,131 @@
+"""Streaming freshness: delta-layer write throughput + recall vs delta size.
+
+Rows (name,value,derived):
+
+  fresh.insert.per_s        overlay insert throughput (beam + RobustPrune
+                            wiring + copy-on-write reverse edges)
+  fresh.delete.per_s        tombstone throughput (O(1) set insert)
+  fresh.delta_<p>pct.*      recall@10 and qps of the *unified* base+delta
+                            batched path as the overlay grows to p% of
+                            the frozen corpus (exact GT recomputed on the
+                            live corpus at every step)
+  fresh.delta.memory_mb     overlay footprint at its largest
+  fresh.consolidate.wall_s  fold -> publish -> verify -> validate ->
+                            promote -> hot swap, end to end
+  fresh.post.recall         recall served by the consolidated build
+  fresh.scratch.recall      recall of a from-scratch build on the same
+                            live corpus -- the parity baseline
+
+Acceptance (asserted, mirrored from tests/test_fresh.py at CI scale):
+tombstoned ids never surface at any stage, and post-consolidation recall
+matches the from-scratch rebuild within PARITY_TOL (coarser than the
+0.01 test bound only because the CI grid runs a handful of queries).
+Knobs: REPRO_BENCH_FRESH_INS (total inserts), REPRO_BENCH_N/NQ (common).
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from . import common
+from repro.core.distances import exact_knn
+from repro.core.engine import BAMGIndex
+from repro.index.delta import DeltaParams, FreshService
+from repro.serve import BatchedANNEngine, EngineConfig
+
+K = 10
+L = 48
+PARITY_TOL = float(os.environ.get("REPRO_BENCH_FRESH_TOL", "0.05"))
+
+
+def _ext_recall(ids: np.ndarray, gt: np.ndarray) -> float:
+    hits = sum(len(set(r[:K].tolist()) & set(g[:K].tolist()))
+               for r, g in zip(ids, gt))
+    return hits / (len(gt) * K)
+
+
+def _live_gt(svc, queries):
+    live_x, live_ext = svc.live_corpus()
+    _, rows = exact_knn(live_x, queries, K)
+    return live_ext[rows]
+
+
+def run() -> None:
+    regime = "sift-like"
+    ds = common.dataset(regime)
+    base_idx = common.default_bamg(regime)
+    n = len(ds.base)
+    n_ins = int(os.environ.get("REPRO_BENCH_FRESH_INS",
+                               str(max(48, n // 16))))
+    rng = np.random.default_rng(0)
+
+    svc = FreshService(tempfile.mkdtemp(prefix="bench-fresh-"),
+                       params=base_idx.params,
+                       config=EngineConfig(l=L, max_hops=24, backend="ref"),
+                       delta_params=DeltaParams(r=16, ef=48))
+    svc.bootstrap(index=base_idx, build_id="gen-0")
+
+    # --- recall-vs-delta-size sweep: grow the overlay in thirds ------------
+    ins_vecs = (ds.base[rng.integers(0, n, n_ins)]
+                + 0.02 * rng.standard_normal((n_ins, ds.base.shape[1]))
+                .astype(np.float32))
+    per = max(1, n_ins // 3)
+    t_ins, ins_ext = 0.0, []
+    for lo in range(0, n_ins, per):
+        chunk = ins_vecs[lo:lo + per]
+        t0 = time.perf_counter()
+        ins_ext.extend(svc.insert_batch(chunk).tolist())
+        t_ins += time.perf_counter() - t0
+        gt = _live_gt(svc, ds.queries)
+        t0 = time.perf_counter()
+        ids, _ = svc.search_batch(ds.queries, K, l=L)
+        dt = time.perf_counter() - t0
+        pct = round(100.0 * svc.delta.n_delta / n, 1)
+        common.emit(f"fresh.delta_{pct}pct.recall",
+                    round(_ext_recall(ids, gt), 4), f"n_delta={svc.delta.n_delta}")
+        common.emit(f"fresh.delta_{pct}pct.qps",
+                    round(len(ds.queries) / dt, 1))
+    common.emit("fresh.insert.per_s", round(len(ins_ext) / t_ins, 1),
+                f"r={svc.delta.params.r};ef={svc.delta.params.ef}")
+    common.emit("fresh.delta.memory_mb",
+                round(svc.delta.memory_bytes() / 2**20, 3))
+
+    # --- deletes: likely-to-surface base ids + a slice of the fresh ones ---
+    dels = sorted(set(ds.gt[:, 0].astype(int).tolist())
+                  | set(ins_ext[:len(ins_ext) // 4]))
+    t0 = time.perf_counter()
+    for e in dels:
+        svc.delete(e)
+    common.emit("fresh.delete.per_s",
+                round(len(dels) / (time.perf_counter() - t0), 1),
+                f"n={len(dels)}")
+    ids, _ = svc.search_batch(ds.queries, K, l=L)
+    assert not (set(ids.ravel().tolist()) & set(dels)), \
+        "tombstoned id surfaced pre-consolidation"
+
+    # --- consolidation: fold + full blue/green republish -------------------
+    t0 = time.perf_counter()
+    svc.consolidate("gen-1", queries=ds.queries, k=K, min_recall=0.0)
+    common.emit("fresh.consolidate.wall_s",
+                round(time.perf_counter() - t0, 2),
+                f"n_live={svc.n_live}")
+    assert svc.manager.active() == "gen-1"
+
+    gt = _live_gt(svc, ds.queries)
+    ids, _ = svc.search_batch(ds.queries, K, l=L)
+    assert not (set(ids.ravel().tolist()) & set(dels)), \
+        "tombstoned id surfaced post-consolidation"
+    r_post = _ext_recall(ids, gt)
+    common.emit("fresh.post.recall", round(r_post, 4),
+                f"validated={svc.last_validation_recall:.3f}")
+
+    live_x, live_ext = svc.live_corpus()
+    scratch = BAMGIndex.build(live_x, base_idx.params)
+    sids, _ = BatchedANNEngine.from_index(
+        scratch, svc.config).search_batch(ds.queries, K, l=L)
+    r_scratch = _ext_recall(live_ext[sids], gt)
+    common.emit("fresh.scratch.recall", round(r_scratch, 4))
+    assert abs(r_post - r_scratch) <= PARITY_TOL, \
+        (f"consolidation recall parity broken: post={r_post:.4f} "
+         f"scratch={r_scratch:.4f} tol={PARITY_TOL}")

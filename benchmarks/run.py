@@ -17,9 +17,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_ablation, bench_alpha, bench_beta, bench_degrees,
-                   bench_indexing, bench_io_pipeline, bench_kernels,
-                   bench_memory, bench_nio_recall, bench_qps_recall,
-                   bench_roofline, bench_serve)
+                   bench_fresh, bench_indexing, bench_io_pipeline,
+                   bench_kernels, bench_memory, bench_nio_recall,
+                   bench_qps_recall, bench_roofline, bench_serve)
 
     suites = [
         ("fig4", bench_qps_recall.run),
@@ -34,6 +34,7 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
         ("serve", bench_serve.run),
+        ("fresh", bench_fresh.run),
         # named without "serve" so `--only serve` (substring match) does
         # not double-run the sweep alongside the serve suite
         ("load_sweep", bench_serve.run_load_sweep),

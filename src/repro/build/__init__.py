@@ -17,7 +17,7 @@ fixed-shape array programs:
 from .builder import BuildConfig, GraphBuilder
 from .frontier import frontier_pools
 from .pool import pool_merge
-from .prune import robust_prune_batch
+from .prune import robust_prune_batch, robust_prune_inc
 
 __all__ = [
     "BuildConfig",
@@ -25,4 +25,5 @@ __all__ = [
     "frontier_pools",
     "pool_merge",
     "robust_prune_batch",
+    "robust_prune_inc",
 ]

@@ -119,3 +119,50 @@ def robust_prune_batch(
     out = _prune_batch(xj, jnp.asarray(p_ids, jnp.int32),
                        jnp.asarray(cand_ids), d, r=r, alpha=float(alpha))
     return np.asarray(out)
+
+
+def robust_prune_inc(
+    p_vec: np.ndarray,
+    cand_ids: np.ndarray,
+    cand_vecs: np.ndarray,
+    r: int,
+    alpha: float = 1.0,
+) -> np.ndarray:
+    """Incremental RobustPrune over explicit candidate vectors.
+
+    The streaming entry point (delta-layer inserts, consolidation edge
+    repair): unlike `robust_prune_batch` there is no global corpus array --
+    the caller hands over the candidate vectors directly, so it works on a
+    growing buffer that mixes frozen-base and delta points.  Same contract
+    as the host reference: dedupe by id ascending, stable scan by distance
+    (ties toward lower id), keep v unless a kept u has
+    ``alpha * d(u, v) <= d(p, v)``, cap at r.  Returns kept ids (<= r,)
+    int64 in selection order.
+    """
+    cand_ids = np.asarray(cand_ids, np.int64)
+    cand_vecs = np.asarray(cand_vecs, np.float32)
+    p_vec = np.asarray(p_vec, np.float32)
+    if len(cand_ids) == 0:
+        return np.empty(0, np.int64)
+    uniq, first = np.unique(cand_ids, return_index=True)
+    cand_ids, cand_vecs = uniq, cand_vecs[first]
+    diff = cand_vecs - p_vec[None, :]
+    cand_d = np.einsum("nd,nd->n", diff, diff)
+    o = np.argsort(cand_d, kind="stable")
+    kept: list[int] = []
+    kept_vecs: list[np.ndarray] = []
+    for i in o.tolist():
+        dv = float(cand_d[i])
+        xv = cand_vecs[i]
+        ok = True
+        for xu in kept_vecs:
+            duv = float(np.dot(xu - xv, xu - xv))
+            if alpha * duv <= dv:
+                ok = False
+                break
+        if ok:
+            kept.append(int(cand_ids[i]))
+            kept_vecs.append(xv)
+            if len(kept) >= r:
+                break
+    return np.asarray(kept, np.int64)

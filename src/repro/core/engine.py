@@ -256,17 +256,20 @@ class DiskANNIndex:
                                      timeout_us=timeout_us, hedge_us=hedge_us)
 
     def search(self, q: np.ndarray, k: int, l: int,
-               drop_cache: bool = True) -> SearchResult:
+               drop_cache: bool = True,
+               exclude: Optional[set] = None) -> SearchResult:
         table = self.codec.adc_table(q)
         bs = max(2, self.params.qd) if self.params.batch_io else None
         return search_coupled(self.store, self.codes, table, q, self.entry,
                               k, l, block_level=False, batch_submit=bs,
-                              drop_cache=drop_cache)
+                              drop_cache=drop_cache, exclude=exclude)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
                      gt: Optional[np.ndarray] = None,
-                     warm_cache: bool = False) -> BatchStats:
-        return _batch(lambda i, q, dc: self.search(q, k, l, drop_cache=dc),
+                     warm_cache: bool = False,
+                     exclude: Optional[set] = None) -> BatchStats:
+        return _batch(lambda i, q, dc: self.search(q, k, l, drop_cache=dc,
+                                                   exclude=exclude),
                       queries, gt, k, self.cost, warm_cache)
 
     def degree_stats(self):
@@ -370,18 +373,21 @@ class StarlingIndex:
         return [int(self.nav_vids[i]) for i in ids[:n_entry]] or [self.entry]
 
     def search(self, q: np.ndarray, k: int, l: int,
-               drop_cache: bool = True) -> SearchResult:
+               drop_cache: bool = True,
+               exclude: Optional[set] = None) -> SearchResult:
         table = self.codec.adc_table(q)
         entries = self._nav_entries(table)
         bs = max(2, self.params.qd) if self.params.batch_io else None
         return search_coupled(self.store, self.codes, table, q, entries,
                               k, l, block_level=True, batch_submit=bs,
-                              drop_cache=drop_cache)
+                              drop_cache=drop_cache, exclude=exclude)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
                      gt: Optional[np.ndarray] = None,
-                     warm_cache: bool = False) -> BatchStats:
-        return _batch(lambda i, q, dc: self.search(q, k, l, drop_cache=dc),
+                     warm_cache: bool = False,
+                     exclude: Optional[set] = None) -> BatchStats:
+        return _batch(lambda i, q, dc: self.search(q, k, l, drop_cache=dc,
+                                                   exclude=exclude),
                       queries, gt, k, self.cost, warm_cache)
 
     def degree_stats(self):
@@ -488,6 +494,25 @@ class BAMGIndex:
         store = _make_decoupled_store(x, graph, nav, p)
         return cls(x, graph, codec, codes, store, nav, p)
 
+    @classmethod
+    def from_graph(cls, x: np.ndarray, graph: BAMGGraph,
+                   params: BAMGParams = BAMGParams()) -> "BAMGIndex":
+        """Index from an already-built BAMG graph (streaming consolidation:
+        the graph comes out of delta-fold + Alg-2 refine, not a fresh
+        `build`).  Trains PQ, builds the nav graph, and lays out storage
+        exactly as `build` would."""
+        p = dataclasses.replace(params)        # configure_io mutates in place
+        m = p.pq_m or _pick_pq_m(x.shape[1])
+        codec = train_pq(x, m=m, seed=p.seed)
+        codes = codec.encode(x)
+        nav = None
+        if p.use_nav:
+            nav = build_navgraph(x, graph, alpha=p.alpha, beta=p.beta,
+                                 gamma=p.gamma, capacity=graph.capacity,
+                                 seed=p.seed)
+        store = _make_decoupled_store(x, graph, nav, p)
+        return cls(x, graph, codec, codes, store, nav, p)
+
     def configure_io(self, cache_policy: Optional[str] = None,
                      vec_cache_policy: Optional[str] = None,
                      cache_blocks: Optional[int] = None,
@@ -533,7 +558,8 @@ class BAMGIndex:
                random_entry_seed: Optional[int] = None,
                max_hops: Optional[int] = None,
                batch_io: Optional[bool] = None,
-               drop_cache: bool = True) -> SearchResult:
+               drop_cache: bool = True,
+               exclude: Optional[set] = None) -> SearchResult:
         table = self.codec.adc_table(q)
         if random_entry_seed is not None:  # ablation "BAMG w/o NG"
             rng = np.random.default_rng(random_entry_seed)
@@ -548,7 +574,7 @@ class BAMGIndex:
         return search_bamg(self.store, self.codes, table, q, entries, k, l,
                            alpha=a, rerank_margin=rerank_margin,
                            max_hops=max_hops, batch_submit=bs,
-                           drop_cache=drop_cache)
+                           drop_cache=drop_cache, exclude=exclude)
 
     def search_batch(self, queries: np.ndarray, k: int, l: int,
                      gt: Optional[np.ndarray] = None,
@@ -557,12 +583,14 @@ class BAMGIndex:
                      random_entry: bool = False,
                      max_hops: Optional[int] = None,
                      batch_io: Optional[bool] = None,
-                     warm_cache: bool = False) -> BatchStats:
+                     warm_cache: bool = False,
+                     exclude: Optional[set] = None) -> BatchStats:
         return _batch(
             lambda i, q, dc: self.search(
                 q, k, l, alpha=alpha, rerank_margin=rerank_margin,
                 random_entry_seed=(i if random_entry else None),
-                max_hops=max_hops, batch_io=batch_io, drop_cache=dc),
+                max_hops=max_hops, batch_io=batch_io, drop_cache=dc,
+                exclude=exclude),
             queries, gt, k, self.cost, warm_cache)
 
     def batch_arrays(self, n_entry_cands: int = 256) -> dict:

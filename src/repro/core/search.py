@@ -98,8 +98,15 @@ def search_coupled(
     max_hops: int | None = None,
     batch_submit: int | None = None,  # prefetch width (timing only)
     drop_cache: bool = True,          # False = warm cross-query cache
+    exclude: set[int] | frozenset[int] | None = None,  # tombstoned VIDs
 ) -> SearchResult:
+    """Tombstones (`exclude`, streaming freshness): excluded VIDs stay fully
+    navigable -- they enter the pool and are beam-expanded like any other
+    node so connectivity through deleted points survives -- but they never
+    enter the exact-result set, so they cannot appear in the returned top-k.
+    """
     store.reset(drop_cache=drop_cache)
+    excl = exclude if exclude is not None else ()
     m_sub = adc_table.shape[0]
     n_pq = 0
     n_dist = 0
@@ -144,7 +151,7 @@ def search_coupled(
             mask = rec.vids >= 0
             vids = rec.vids[mask]
             for s, vv in enumerate(vids.tolist()):
-                if vv not in results:
+                if vv not in results and vv not in excl:
                     results[vv] = _sqd(rec.vecs[mask][s], q)
                     n_dist += 1
             nbrs = rec.nbrs[mask]
@@ -152,7 +159,7 @@ def search_coupled(
             cand = np.concatenate([vids.astype(np.int64), cand.astype(np.int64)])
         else:
             s = store.slot_in_block(v)
-            if v not in results:
+            if v not in results and v not in excl:
                 results[v] = _sqd(rec.vecs[s], q)
                 n_dist += 1
             nn = rec.nbrs[s]
@@ -220,6 +227,7 @@ def search_bamg(
     max_hops: int | None = None,
     batch_submit: int | None = None,
     drop_cache: bool = True,
+    exclude: set[int] | frozenset[int] | None = None,
 ) -> SearchResult:
     """Algorithm 4: pool by PQ distance; each pop loads one graph block and
     runs a bounded (depth alpha) intra-block BFS; final phase loads raw
@@ -244,8 +252,14 @@ def search_bamg(
     re-rank drops the affected candidates, and the result carries
     ``degraded=True`` with ``failed_reads`` counting the skips.  The query
     never crashes on an unreadable block.
+
+    Tombstones (`exclude`, streaming freshness): excluded VIDs stay fully
+    navigable -- the beam walks through them so the monotonic-path property
+    survives deletes -- but they are dropped before the refinement phase:
+    their vectors are never read and they never enter the exact top-k.
     """
     store.reset(drop_cache=drop_cache)
+    excl = exclude if exclude is not None else ()
     m_sub = adc_table.shape[0]
     n_pq = 0
     n_dist = 0
@@ -293,13 +307,16 @@ def search_bamg(
     # refinement: load raw vectors for pool candidates, exact re-rank.
     # Under fault injection a candidate whose vector block is unreadable is
     # dropped (None from the storage layer) -- partial top-k, never a crash.
-    n_rerank = len(pool.ids) if rerank is None else min(rerank, len(pool.ids))
+    # Tombstoned candidates are masked here: no vector read, no result slot.
+    live_ids = [vv for vv in pool.ids if vv not in excl]
+    live_d = [dv for vv, dv in zip(pool.ids, pool.d) if vv not in excl]
+    n_rerank = len(live_ids) if rerank is None else min(rerank, len(live_ids))
     exact: dict[int, float] = {}
     failed_vecs = 0
     if rerank_margin is None:
         # paper-faithful: all candidates, read in OID order for contiguity;
         # in batched mode the whole read set goes down as one submission
-        cand = sorted(pool.ids[:n_rerank], key=lambda vv: int(store.vid2oid[vv]))
+        cand = sorted(live_ids[:n_rerank], key=lambda vv: int(store.vid2oid[vv]))
         vecs = store.read_vectors([int(store.vid2oid[vv]) for vv in cand],
                                   batched=batch_submit is not None)
         for vv, vec in zip(cand, vecs):
@@ -312,7 +329,7 @@ def search_bamg(
         # beyond-paper early stop: ascending PQ order + adaptive cutoff
         import heapq
         worst_k: list[float] = []  # max-heap (negated) of best k exact dists
-        for vv, dpq in zip(pool.ids[:n_rerank], pool.d[:n_rerank]):
+        for vv, dpq in zip(live_ids[:n_rerank], live_d[:n_rerank]):
             if len(worst_k) >= k and dpq > rerank_margin * (-worst_k[0]):
                 break
             vec = store.read_vector(int(store.vid2oid[vv]))

@@ -83,14 +83,18 @@ class EngineConfig:
 @functools.partial(jax.jit, static_argnames=("k", "l", "max_hops", "n_entry",
                                              "rerank", "backend"))
 def batched_search(x, adj, codes, codebooks, entry_cands, entry_codes,
-                   queries, k: int, l: int, max_hops: int, n_entry: int,
+                   queries, tomb, k: int, l: int, max_hops: int, n_entry: int,
                    rerank: int, backend: str):
     """One fixed-shape search step for a whole query batch.
 
     x (N, D) f32; adj (N, R) int32 VID neighbors, -1 pad; codes (N, M);
     codebooks (M, K, dsub); entry_cands (E,) int32 VIDs with their codes
-    (E, M); queries (B, D).  Returns (ids (B, k) int32 with -1 pad,
-    dists (B, k) f32 ascending, hops_used (B,) int32).
+    (E, M); queries (B, D); tomb (N,) bool tombstone mask (streaming
+    freshness -- tombstoned VIDs stay navigable in the beam but are masked
+    at the exact re-rank, so they can never reach the returned top-k; the
+    mask is a traced argument, so flipping tombstones never recompiles).
+    Returns (ids (B, k) int32 with -1 pad, dists (B, k) f32 ascending,
+    hops_used (B,) int32).
     """
     b = queries.shape[0]
     queries = queries.astype(jnp.float32)
@@ -139,10 +143,12 @@ def batched_search(x, adj, codes, codebooks, entry_cands, entry_codes,
             step, (pool_ids, pool_d, pool_exp, jnp.zeros(b, jnp.int32)),
             None, length=max_hops)
 
-    # --- exact re-rank of each row's pool prefix
+    # --- exact re-rank of each row's pool prefix (tombstones masked here:
+    # the fused hop loop never sees the mask, so this covers every backend)
     cand = pool_ids[:, :rerank]                            # (B, C)
     vecs = x[jnp.clip(cand, 0)]                            # (B, C, D)
-    dists, ridx = l2_topk_rowwise(queries, vecs, k, valid=cand >= 0)
+    valid = (cand >= 0) & ~tomb[jnp.clip(cand, 0)]
+    dists, ridx = l2_topk_rowwise(queries, vecs, k, valid=valid)
     ids = jnp.take_along_axis(cand, ridx, axis=1)
     ids = jnp.where(jnp.isfinite(dists), ids, -1)
     return ids, dists, hops
@@ -158,7 +164,7 @@ class BatchedANNEngine:
 
     # arrays moved between mesh devices by place()/replicate()
     _ARRAY_ATTRS = ("x", "adj", "codes", "codebooks", "entry_cands",
-                    "entry_codes")
+                    "entry_codes", "tomb")
 
     def __init__(self, arrays: dict, config: Optional[EngineConfig] = None):
         self.config = config = config if config is not None else EngineConfig()
@@ -170,6 +176,7 @@ class BatchedANNEngine:
         self.codebooks = jnp.asarray(arrays["codebooks"], jnp.float32)
         self.entry_cands = jnp.asarray(cands, jnp.int32)
         self.entry_codes = jnp.asarray(arrays["codes"][cands])
+        self.tomb = jnp.zeros(self.n, bool)    # tombstone mask (freshness)
         l = min(config.l, self.n)
         self._l = l
         self._rerank = min(config.rerank if config.rerank is not None else l, l)
@@ -225,8 +232,23 @@ class BatchedANNEngine:
     def heal(self) -> None:
         self._fault = None
 
+    def set_tombstones(self, vids) -> None:
+        """Replace the engine's tombstone mask (streaming freshness).
+
+        `vids` is an iterable of VIDs to mask; out-of-range ids are
+        ignored.  The mask is a traced jit argument, so this never
+        triggers recompilation -- deletes take effect on the next call.
+        """
+        mask = np.zeros(self.n, bool)
+        ids = np.asarray(list(vids), np.int64)
+        if len(ids):
+            ids = ids[(ids >= 0) & (ids < self.n)]
+            mask[ids] = True
+        self.tomb = jnp.asarray(mask)
+
     def search_batch(self, queries: np.ndarray, k: int, *,
-                     l: Optional[int] = None, max_hops: Optional[int] = None):
+                     l: Optional[int] = None, max_hops: Optional[int] = None,
+                     exclude=None):
         """queries (B, D) -> (ids (B, k) int64 with -1 pad, dists (B, k)).
 
         `l` / `max_hops` optionally shrink the pool / hop budget for this
@@ -234,6 +256,11 @@ class BatchedANNEngine:
         `repro.serve.runtime.scheduler`).  Both are static jit arguments,
         so each distinct override compiles once and is cached like any
         other shape; defaults reproduce the configured beam exactly.
+
+        `exclude` masks additional VIDs for this call only (on top of any
+        standing `set_tombstones` mask): excluded ids stay navigable but
+        never appear in the returned top-k.  Accepts an iterable of VIDs
+        or a (N,) bool mask.
         """
         if self._fault is not None:
             raise self._fault
@@ -249,9 +276,22 @@ class BatchedANNEngine:
                 f"k={k} exceeds the rerank capacity {rerank}; raise "
                 f"EngineConfig.l/rerank (fixed at engine construction) or "
                 f"the per-call l override")
+        tomb = self.tomb
+        if exclude is not None:
+            if not isinstance(exclude, np.ndarray):
+                exclude = sorted(exclude)       # sets/frozensets/iterables
+            extra = np.asarray(exclude)
+            if extra.dtype != bool:
+                mask = np.zeros(self.n, bool)
+                ids = extra.astype(np.int64).ravel()
+                if len(ids):
+                    ids = ids[(ids >= 0) & (ids < self.n)]
+                    mask[ids] = True
+                extra = mask
+            tomb = tomb | jnp.asarray(extra)
         ids, dists, _ = batched_search(
             self.x, self.adj, self.codes, self.codebooks, self.entry_cands,
-            self.entry_codes, q, k=k, l=l_eff,
+            self.entry_codes, q, tomb, k=k, l=l_eff,
             max_hops=hops, n_entry=self._n_entry,
             rerank=rerank, backend=self.config.backend)
         return np.asarray(ids, np.int64), np.asarray(dists)

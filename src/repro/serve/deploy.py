@@ -167,21 +167,36 @@ class DeploymentManager:
             f.write(build_id + "\n")
         return build_id
 
+    def rollback_target(self) -> Optional[str]:
+        """The build `rollback()` would promote: the most recent HISTORY
+        entry that is not the active build and is still published (a
+        pruned entry cannot be re-promoted, so it is skipped)."""
+        published = set(self.builds())
+        cur = self.active()
+        for b in reversed(self.history()):
+            if b != cur and b in published:
+                return b
+        return None
+
     def rollback(self) -> str:
-        """Re-promote the previous distinct build from HISTORY."""
-        hist, cur = self.history(), self.active()
-        prev = [b for b in hist if b != cur]
-        if not prev:
+        """Re-promote the previous distinct *still-published* build."""
+        target = self.rollback_target()
+        if target is None:
             raise RuntimeError("rollback: no previous build in history")
-        return self.promote(prev[-1])
+        return self.promote(target)
 
     def prune(self, keep: int = 2) -> list[str]:
-        """Drop the oldest published builds beyond `keep`, never the active
-        one.  Returns the removed build ids."""
+        """Drop the oldest published builds beyond `keep`.
+
+        The ACTIVE build and the current rollback target are protected
+        unconditionally -- even `keep=0` can never delete the build being
+        served or strand `rollback()`.  Returns the removed build ids."""
         import shutil
-        victims, cur = [], self.active()
-        candidates = [b for b in self.builds() if b != cur]
-        n_keep = max(0, keep - (1 if cur else 0))
+        protected = {b for b in (self.active(), self.rollback_target())
+                     if b is not None}
+        victims = []
+        candidates = [b for b in self.builds() if b not in protected]
+        n_keep = max(0, keep - len(protected))
         excess = len(candidates) - n_keep
         for b in candidates[:max(0, excess)]:
             shutil.rmtree(os.path.join(self.builds_dir, b))
@@ -232,11 +247,15 @@ class BlueGreenEngine:
     uses green."""
 
     def __init__(self, manager: DeploymentManager,
-                 config: Optional[EngineConfig] = None):
+                 config: Optional[EngineConfig] = None,
+                 keep_index: bool = False):
         self.manager = manager
         self.config = config if config is not None else EngineConfig()
+        self.keep_index = keep_index   # retain the loaded BAMGIndex (the
+        # streaming delta layer wires its in-memory graph off it)
         self.build_id: Optional[str] = None
         self._engine: Optional[BatchedANNEngine] = None
+        self.index: Optional[BAMGIndex] = None
         self.refresh()
 
     def refresh(self) -> bool:
@@ -244,12 +263,19 @@ class BlueGreenEngine:
         target = self.manager.active()
         if target is None or target == self.build_id:
             return False
-        engine = BatchedANNEngine.from_index(
-            self.manager.load(target), self.config)
+        idx = self.manager.load(target)
+        engine = BatchedANNEngine.from_index(idx, self.config)
+        if self.keep_index:
+            self.index = idx
         self._engine, self.build_id = engine, target   # atomic swap
         return True
 
-    def search_batch(self, queries: np.ndarray, k: int):
+    @property
+    def engine(self) -> Optional[BatchedANNEngine]:
+        """The live engine (None until a build is promoted)."""
+        return self._engine
+
+    def search_batch(self, queries: np.ndarray, k: int, exclude=None):
         if self._engine is None:
             raise RuntimeError("no ACTIVE build promoted yet")
-        return self._engine.search_batch(queries, k)
+        return self._engine.search_batch(queries, k, exclude=exclude)

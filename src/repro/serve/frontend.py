@@ -103,7 +103,7 @@ class ShardedFrontend:
         return self.runtime.health()
 
     def search_batch(self, queries: np.ndarray, k: int,
-                     with_status: bool = False):
+                     with_status: bool = False, exclude=None):
         """(B, D) queries -> global (ids (B, k) int64, dists (B, k)).
 
         One walk of the runtime's compiled program: scatter, one batched
@@ -113,5 +113,7 @@ class ShardedFrontend:
         crash).  With every shard down the answer is all -1/+inf.
         `with_status=True` additionally returns a `ServeStatus` whose
         `degraded` flags mark answers that missed at least one shard.
+        `exclude` forwards global tombstoned ids to the runtime.
         """
-        return self.runtime.serve_batch(queries, k, with_status=with_status)
+        return self.runtime.serve_batch(queries, k, with_status=with_status,
+                                        exclude=exclude)

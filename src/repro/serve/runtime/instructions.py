@@ -97,6 +97,7 @@ class _ExecState:
     k: int
     l: Optional[int]
     max_hops: Optional[int]
+    exclude: Optional[Sequence] = None   # per-shard local tombstone masks
     b: int = 0
     mask: Optional[np.ndarray] = None
     results: dict = dataclasses.field(default_factory=dict)
@@ -121,11 +122,17 @@ class InstructionInterpreter:
 
     def execute(self, program: Sequence[Instruction], queries: np.ndarray,
                 k: int, *, l: Optional[int] = None,
-                max_hops: Optional[int] = None):
+                max_hops: Optional[int] = None,
+                exclude: Optional[Sequence] = None):
         """Run one query batch through the program.
 
-        Returns (ids (B, k) int64, dists (B, k), ServeStatus)."""
-        st = _ExecState(queries=queries, k=k, l=l, max_hops=max_hops)
+        `exclude` is an optional per-shard sequence of shard-local VID
+        lists/masks (the delta-layer tombstone mask, already scattered to
+        local id space by the runtime); each live RUN forwards its shard's
+        entry to the engine.  Returns (ids (B, k) int64, dists (B, k),
+        ServeStatus)."""
+        st = _ExecState(queries=queries, k=k, l=l, max_hops=max_hops,
+                        exclude=exclude)
         for ins in program:
             self._dispatch[ins.op](st, ins)
         status = ServeStatus(
@@ -154,9 +161,11 @@ class InstructionInterpreter:
             # a shard smaller than k contributes what it has, padded at
             # GATHER -- the merge still sees plenty from the other shards
             ks = min(st.k, rep.engine.effective_rerank(st.l))
+            excl = st.exclude[s] if st.exclude is not None else None
             try:
                 ids_s, d_s = rep.worker.run(rep, st.queries, ks,
-                                            l=st.l, max_hops=st.max_hops)
+                                            l=st.l, max_hops=st.max_hops,
+                                            exclude=excl)
             except Exception as e:  # noqa: BLE001 -- replica down, try next
                 self.placement.record_failure(rep, e)
                 continue

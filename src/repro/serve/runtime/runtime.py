@@ -123,10 +123,25 @@ class ServeRuntime:
                 "n_workers": len(self.placement.workers)}
 
     # --- serving ------------------------------------------------------------
+    def _scatter_exclude(self, exclude) -> Optional[list]:
+        """Global tombstone ids -> per-shard local bool masks (None when a
+        shard holds no tombstoned point, so its engine skips the merge)."""
+        if exclude is None:
+            return None
+        ex = np.asarray(list(exclude), np.int64)
+        if len(ex) == 0:
+            return None
+        out = []
+        for vids in self.shard_vids:
+            m = np.isin(vids, ex)
+            out.append(m if m.any() else None)
+        return out
+
     def serve_batch(self, queries: np.ndarray, k: int,
                     with_status: bool = False, *,
                     l: Optional[int] = None,
-                    max_hops: Optional[int] = None):
+                    max_hops: Optional[int] = None,
+                    exclude=None):
         """(B, D) queries -> global (ids (B, k) int64, dists (B, k)).
 
         One walk of the compiled program: SCATTER stages the batch and
@@ -139,9 +154,13 @@ class ServeRuntime:
         additionally returns a `ServeStatus` whose `degraded` flags mark
         answers that missed at least one shard.  `l`/`max_hops` shrink the
         beam for this batch only (deadline-pressed micro-batches).
+        `exclude` is an iterable of *global* tombstoned ids (streaming
+        freshness); they are scattered to shard-local masks and never
+        appear in the merged top-k.
         """
         ids, dists, status = self.interpreter.execute(
-            self.program, queries, k, l=l, max_hops=max_hops)
+            self.program, queries, k, l=l, max_hops=max_hops,
+            exclude=self._scatter_exclude(exclude))
         if not with_status:
             return ids, dists
         return ids, dists, status

@@ -75,13 +75,21 @@ class Completion:
 
 
 class RequestQueue:
-    """Earliest-deadline-first queue (ties broken by rid: FIFO)."""
+    """Earliest-deadline-first queue; equal deadlines dequeue FIFO.
+
+    The tie-break is a push-time arrival sequence number, NOT the rid:
+    rids are caller-assigned and need not be monotone with arrival order,
+    so breaking ties on them would reorder same-deadline requests between
+    replays of the same seeded timeline.  The sequence counter makes EDF
+    stable by arrival, bit-reproducible run to run."""
 
     def __init__(self):
         self._heap: list = []
+        self._seq = 0              # arrival order of pushes (FIFO tie-break)
 
     def push(self, req: Request) -> None:
-        heapq.heappush(self._heap, (req.deadline, req.rid, req))
+        heapq.heappush(self._heap, (req.deadline, self._seq, req))
+        self._seq += 1
 
     def pop_batch(self, n: int) -> list[Request]:
         """The n earliest-deadline requests (fewer when the queue drains)."""

@@ -380,3 +380,52 @@ def test_ft_shares_fault_taxonomy(tmp_path):
     ref, _, a0 = run_with_recovery(init_fn, step_fn, batch_fn, 15, ft2)
     assert a0 == 0
     np.testing.assert_array_equal(ref["w"], state["w"])  # restart-equivalent
+
+
+# ---------------------------------------------------------------------------
+# 7. streaming-freshness satellites (ISSUE 9): tombstones under faults +
+#    prune protecting ACTIVE and the rollback target
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("which", ["bamg", "diskann", "starling"])
+def test_deleted_ids_never_surface_under_faults(which, small_corpus, request):
+    """Tombstone masking composes with fault injection: a deleted id must
+    not surface even when its (or any) block READ_FAILEDs and the
+    degraded skip-and-continue path activates -- on all three engines."""
+    idx = request.getfixturevalue(which)
+    ds = small_corpus
+    # tombstone the exact top-1 of every query: the ids most likely to leak
+    dead = set(ds.gt[:, 0].astype(int).tolist())
+    idx.configure_io(faults=FaultSpec(dead_rate=0.15, read_error_rate=0.05),
+                     fault_seed=3)
+    try:
+        n_degraded = 0
+        for q in ds.queries:
+            r = idx.search(q, k=K, l=L, exclude=dead)
+            assert not (set(r.ids.tolist()) & dead)
+            n_degraded += bool(r.degraded)
+        assert n_degraded > 0       # skip-and-continue actually activated
+    finally:
+        idx.configure_io(faults=None, retry=None)
+    # clean path: the mask alone never degrades anything
+    r = idx.search(ds.queries[0], k=K, l=L, exclude=dead)
+    assert not r.degraded and not (set(r.ids.tolist()) & dead)
+
+
+def test_prune_protects_active_and_rollback_target(small_corpus, tmp_path):
+    """Regression: aggressive prune (keep=0) must never delete the build
+    being served or strand rollback()."""
+    ds = small_corpus
+    dm = DeploymentManager(str(tmp_path))
+    idx = BAMGIndex.build(ds.base, BAMGParams(seed=0))
+    for b in ("b1", "b2", "b3", "b4"):
+        dm.publish(idx, b)
+        dm.promote(b)
+    dm.promote("b2")                # re-activate an *old* build
+    removed = dm.prune(keep=0)      # as aggressive as it gets
+    assert set(removed) == {"b1", "b3"}
+    assert dm.active() == "b2"
+    assert set(dm.builds()) == {"b2", "b4"}    # ACTIVE + rollback target
+    dm.verify("b2")                            # ACTIVE still verifies
+    assert dm.rollback() == "b4"               # rollback still succeeds
+    dm.verify("b4")
+    assert dm.active() == "b4" and "b2" in dm.builds()

@@ -1,0 +1,327 @@
+"""Streaming freshness: delta-layer inserts/deletes over BAMG (ISSUE 9).
+
+Acceptance criteria pinned here:
+
+- **Freshness parity** -- after a seeded insert+delete workload,
+  `consolidate()` produces an index whose top-k recall matches a
+  from-scratch rebuild on the equivalent live corpus within 0.01 at l=48.
+- **Deletes never surface** -- a tombstoned id appears in no pre- or
+  post-consolidation result on any path (host Alg-4, batched engine,
+  overlay beam).  Fault-injected variants live in test_faults.py.
+- **Zero-downtime swap** -- the consolidated build promotes through
+  `DeploymentManager` publish -> verify -> validate -> promote and
+  `BlueGreenEngine.refresh()`, with correct top-k served *throughout*
+  the swap (probed mid-lifecycle, at promote time, before the refresh).
+
+Plus unit coverage of the overlay itself: copy-on-write adjacency (the
+frozen base graph is never mutated), bounded overlay degrees, tombstones
+navigable-but-masked, stable external ids across compaction.
+"""
+import numpy as np
+import pytest
+
+from repro.core.distances import exact_knn
+from repro.core.engine import BAMGIndex, BAMGParams
+from repro.index.delta import (DeltaLayer, DeltaParams, FreshBAMGEngine,
+                               FreshService, consolidate)
+from repro.serve import BatchedANNEngine, EngineConfig
+
+K, L = 10, 48
+_CFG = EngineConfig(l=48, max_hops=24, backend="ref")
+_PARAMS = BAMGParams(seed=0)
+
+
+def _ext_recall(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
+    """Recall@k over external-id result/gt matrices."""
+    hits = sum(len(set(r[:k].tolist()) & set(g[:k].tolist()))
+               for r, g in zip(ids, gt))
+    return hits / (len(gt) * k)
+
+
+@pytest.fixture(scope="module")
+def base_index(small_corpus):
+    return BAMGIndex.build(small_corpus.base, _PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# 1. the delta overlay
+# ---------------------------------------------------------------------------
+def test_delta_insert_wiring_copy_on_write(small_corpus, base_index):
+    ds = small_corpus
+    delta = DeltaLayer(base_index, DeltaParams(r=16, ef=48))
+    frozen = np.asarray(base_index.graph.adj).copy()
+    rng = np.random.default_rng(11)
+    picks = rng.integers(0, len(ds.base), 20)
+    vecs = ds.base[picks] + 0.02 * rng.standard_normal(
+        (20, ds.base.shape[1])).astype(np.float32)
+    ids = delta.insert_batch(vecs)
+    # inserts get fresh global ids past the frozen corpus
+    np.testing.assert_array_equal(
+        ids, np.arange(delta.n_base, delta.n_base + 20))
+    assert delta.n_delta == 20 and delta.n_total == delta.n_base + 20
+    # the frozen base adjacency is never mutated -- overrides shadow it
+    np.testing.assert_array_equal(np.asarray(base_index.graph.adj), frozen)
+    assert any(u < delta.n_base for u in delta.overrides)  # reverse edges
+    # overlay degrees stay bounded by the overlay R
+    assert all(len(row) <= 16 for row in delta.overrides.values())
+    # every inserted point is immediately findable by its own vector
+    for vid, v in zip(ids.tolist(), vecs):
+        rids, rd = delta.search(v, k=3)
+        assert rids[0] == vid and rd[0] == pytest.approx(0.0, abs=1e-3)
+    assert delta.memory_bytes() > 0
+
+
+def test_delta_tombstone_masked_but_navigable(small_corpus, base_index):
+    ds = small_corpus
+    delta = DeltaLayer(base_index, DeltaParams(r=16, ef=48))
+    # tombstone the exact nearest neighbor of every query: the ids most
+    # likely to surface, and hubs whose removal would sever paths
+    dead = sorted(set(ds.gt[:, 0].astype(int).tolist()))
+    delta.delete_batch(dead)
+    assert set(dead) <= delta.tombstones
+    for v in dead:
+        assert len(delta.neighbors(v)) > 0      # still navigable
+    for q, g in zip(ds.queries, ds.gt):
+        rids, rd = delta.search(q, k=K)
+        assert not (set(rids.tolist()) & set(dead))
+        # the beam still walks *through* tombstones: the surviving
+        # neighbors behind them are found
+        live_gt = [v for v in g.tolist() if v not in delta.tombstones]
+        assert set(rids.tolist()) & set(live_gt)
+        assert (np.diff(rd) >= 0).all()
+
+
+def test_delta_delete_validates_and_insert_checks_dim(base_index):
+    delta = DeltaLayer(base_index)
+    with pytest.raises(KeyError):
+        delta.delete(delta.n_total)             # out of range
+    with pytest.raises(KeyError):
+        delta.delete(-1)
+    with pytest.raises(ValueError, match="dim"):
+        delta.insert(np.zeros(delta.d + 1, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# 2. unified base+delta engine (host + batched paths)
+# ---------------------------------------------------------------------------
+def test_fresh_engine_paths_agree_and_mask_tombstones(small_corpus,
+                                                      base_index):
+    ds = small_corpus
+    delta = DeltaLayer(base_index, DeltaParams(r=16, ef=48))
+    eng = BatchedANNEngine.from_index(base_index, _CFG)
+    fresh = FreshBAMGEngine(base_index, delta, engine=eng)
+    rng = np.random.default_rng(5)
+    picks = rng.integers(0, len(ds.base), 30)
+    vecs = ds.base[picks] + 0.02 * rng.standard_normal(
+        (30, ds.base.shape[1])).astype(np.float32)
+    new_ids = delta.insert_batch(vecs)
+    dead = set(ds.gt[:, 0].astype(int).tolist()) | set(new_ids[:5].tolist())
+    delta.delete_batch(sorted(dead))
+
+    live_x = np.concatenate([ds.base, vecs])
+    live_ids = np.asarray([v for v in range(delta.n_total)
+                           if v not in dead], np.int64)
+    _, gt_rows = exact_knn(live_x[live_ids], ds.queries, K)
+    gt = live_ids[gt_rows]
+
+    h_ids = np.stack([fresh.search(q, K, l=L)[0] for q in ds.queries])
+    b_ids, b_d = fresh.search_batch(ds.queries, K, l=L)
+    for ids in (h_ids, b_ids):
+        assert ids.shape == (len(ds.queries), K)
+        assert not (set(ids.ravel().tolist()) & dead)   # no tombstone leaks
+        assert _ext_recall(ids, gt, K) >= 0.9
+    assert (np.diff(np.where(np.isfinite(b_d), b_d, np.inf),
+                    axis=1) >= 0).all()
+    # a live inserted point dominates a query at its own vector, both paths
+    probe = vecs[10]
+    assert fresh.search(probe, K, l=L)[0][0] == new_ids[10]
+    assert fresh.search_batch(probe[None, :], K)[0][0, 0] == new_ids[10]
+
+    # batched path without an engine is a loud error, not a silent fallback
+    with pytest.raises(RuntimeError, match="engine"):
+        FreshBAMGEngine(base_index, delta).search_batch(ds.queries, K)
+
+
+def test_batched_tombstone_mask_matches_exclude_arg(small_corpus, base_index):
+    """The engine's standing tombstone mask and the per-call exclude arg
+    are the same mechanism: identical results, no recompilation-driven
+    drift, and the masked ids never appear."""
+    ds = small_corpus
+    eng = BatchedANNEngine.from_index(base_index, _CFG)
+    dead = ds.gt[:, 0].astype(np.int64)
+    a_ids, a_d = eng.search_batch(ds.queries, K, exclude=set(dead.tolist()))
+    eng.set_tombstones(dead)
+    b_ids, b_d = eng.search_batch(ds.queries, K)
+    np.testing.assert_array_equal(a_ids, b_ids)
+    np.testing.assert_array_equal(a_d, b_d)
+    assert not (set(b_ids.ravel().tolist()) & set(dead.tolist()))
+    # clearing the mask restores the unmasked answers
+    eng.set_tombstones([])
+    c_ids, _ = eng.search_batch(ds.queries, K)
+    assert set(c_ids[:, 0].tolist()) & set(dead.tolist())
+
+
+def test_consolidate_requires_live_points(base_index):
+    delta = DeltaLayer(base_index)
+    delta.delete_batch(np.arange(delta.n_total))
+    with pytest.raises(ValueError, match="live"):
+        consolidate(base_index, delta)
+
+
+# ---------------------------------------------------------------------------
+# 3. the full service lifecycle (acceptance criteria)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lifecycle(small_corpus, tmp_path_factory):
+    """One seeded insert+delete workload driven through bootstrap ->
+    serve -> consolidate -> hot swap, with probes at every stage."""
+    ds = small_corpus
+    rng = np.random.default_rng(7)
+    d = ds.base.shape[1]
+    # 32 probe queries: granularity 1/(32*K) ~ 0.003 << the 0.01 bound
+    queries = np.concatenate([
+        ds.queries,
+        ds.base[rng.integers(0, len(ds.base), 20)]
+        + 0.05 * rng.standard_normal((20, d)).astype(np.float32)])
+
+    svc = FreshService(str(tmp_path_factory.mktemp("fresh")),
+                       params=_PARAMS, config=_CFG,
+                       delta_params=DeltaParams(r=16, ef=48))
+    svc.bootstrap(ds.base, "gen-0")
+
+    picks = rng.integers(0, len(ds.base), 60)
+    ins_vecs = ds.base[picks] + 0.02 * rng.standard_normal(
+        (60, d)).astype(np.float32)
+    ins_ext = svc.insert_batch(ins_vecs)
+    # delete likely-to-surface base points plus a slice of the fresh ones
+    del_ext = sorted(set(ds.gt[:, 0].astype(int).tolist())
+                     | set(ins_ext[:10].tolist()))
+    for e in del_ext:
+        svc.delete(e)
+
+    pre_ids, _ = svc.search_batch(queries, K, l=L)
+    pre_host = np.stack([svc.search(q, K, l=L)[0] for q in queries])
+
+    live_x, live_ext = svc.live_corpus()
+    _, gt_rows = exact_knn(live_x, queries, K)
+    gt_ext = live_ext[gt_rows]
+
+    # probe *during* the swap: at promote time the new build is published
+    # and verified but the blue engine has not refreshed -- reads must
+    # still come from the old base+delta, bit-identical to before
+    probes = {}
+    orig_promote = svc.manager.promote
+
+    def probing_promote(build_id):
+        probes["during"], _ = svc.search_batch(queries, K, l=L)
+        return orig_promote(build_id)
+
+    svc.manager.promote = probing_promote
+    try:
+        svc.consolidate("gen-1", queries=queries, k=K, min_recall=0.5)
+    finally:
+        del svc.manager.promote
+
+    post_ids, _ = svc.search_batch(queries, K, l=L)
+    post_host = np.stack([svc.search(q, K, l=L)[0] for q in queries])
+
+    scratch = BAMGIndex.build(live_x, _PARAMS)
+    scratch_ids = live_ext[np.stack(
+        [np.pad(r.ids[:K], (0, K - min(K, len(r.ids))))
+         for r in (scratch.search(q, k=K, l=L) for q in queries)])]
+
+    return dict(svc=svc, queries=queries, gt_ext=gt_ext,
+                ins_vecs=ins_vecs, ins_ext=ins_ext, del_ext=set(del_ext),
+                pre_ids=pre_ids, pre_host=pre_host, probes=probes,
+                post_ids=post_ids, post_host=post_host,
+                scratch_ids=scratch_ids, n_live=len(live_ext))
+
+
+def test_deletes_never_surface_any_stage(lifecycle):
+    lc = lifecycle
+    for ids in (lc["pre_ids"], lc["pre_host"], lc["probes"]["during"],
+                lc["post_ids"], lc["post_host"]):
+        assert not (set(ids.ravel().tolist()) & lc["del_ext"])
+
+
+def test_inserts_visible_before_and_after_consolidation(lifecycle):
+    lc, svc = lifecycle, lifecycle["svc"]
+    live = [i for i in range(len(lc["ins_ext"]))
+            if int(lc["ins_ext"][i]) not in lc["del_ext"]][:5]
+    for i in live:
+        ids, d = svc.search_batch(lc["ins_vecs"][i][None, :], K)
+        assert ids[0, 0] == lc["ins_ext"][i]
+        assert d[0, 0] == pytest.approx(0.0, abs=1e-3)
+        eid, dh = svc.search(lc["ins_vecs"][i], K, l=L)
+        assert eid[0] == lc["ins_ext"][i]
+
+
+def test_freshness_parity_with_from_scratch_rebuild(lifecycle):
+    """The acceptance bound: consolidated recall within 0.01 of a
+    from-scratch build on the identical live corpus, same l, same k."""
+    lc = lifecycle
+    r_cons = _ext_recall(lc["post_host"], lc["gt_ext"], K)
+    r_scratch = _ext_recall(lc["scratch_ids"], lc["gt_ext"], K)
+    assert r_scratch >= 0.9                    # the baseline itself is sane
+    assert abs(r_cons - r_scratch) <= 0.01
+    # the batched path over the consolidated build holds recall too
+    assert _ext_recall(lc["post_ids"], lc["gt_ext"], K) >= r_scratch - 0.05
+
+
+def test_swap_serves_correct_topk_throughout(lifecycle):
+    """Reads probed mid-lifecycle (publish done, promote in flight,
+    refresh not yet run) are bit-identical to pre-consolidation state:
+    no window where a delete resurfaces or an insert vanishes."""
+    lc = lifecycle
+    np.testing.assert_array_equal(lc["probes"]["during"], lc["pre_ids"])
+    # pre- and post-swap answers are both high-recall against exact truth
+    assert _ext_recall(lc["pre_ids"], lc["gt_ext"], K) >= 0.85
+    assert _ext_recall(lc["post_ids"], lc["gt_ext"], K) >= 0.85
+
+
+def test_consolidated_build_promoted_with_lineage(lifecycle):
+    svc = lifecycle["svc"]
+    dm = svc.manager
+    assert dm.active() == "gen-1"
+    assert dm.history() == ["gen-0", "gen-1"]
+    assert dm.rollback_target() == "gen-0"     # old build kept for rollback
+    man = dm.manifest("gen-1")
+    assert man.meta["generation"] == 1
+    assert man.meta["n_delta"] == 60
+    assert svc.last_validation_recall >= 0.5
+    assert man.n == lifecycle["n_live"]
+    dm.verify("gen-1")                         # artifact checksums hold
+    # the service rewired onto an empty overlay after the swap
+    assert svc.delta.n_delta == 0 and not svc.delta.tombstones
+    assert svc.n_live == lifecycle["n_live"]
+
+
+def test_external_ids_stable_across_compaction(lifecycle):
+    """The same external id resolves to the same vector after the swap."""
+    lc, svc = lifecycle, lifecycle["svc"]
+    live = [i for i in range(len(lc["ins_ext"]))
+            if int(lc["ins_ext"][i]) not in lc["del_ext"]]
+    for i in live[::7]:
+        e = int(lc["ins_ext"][i])
+        internal = svc._int_of_ext[e]
+        np.testing.assert_allclose(svc.delta.vector(internal),
+                                   lc["ins_vecs"][i], atol=1e-5)
+    # deleted external ids are gone from the map entirely
+    assert not (set(svc._int_of_ext) & lc["del_ext"])
+    with pytest.raises(KeyError):
+        svc.delete(next(iter(lc["del_ext"])))
+
+
+def test_second_epoch_continues_after_swap(lifecycle):
+    """The rewired service accepts the next epoch of writes immediately."""
+    lc, svc = lifecycle, lifecycle["svc"]
+    rng = np.random.default_rng(23)
+    v = (lc["ins_vecs"][0] + 0.01
+         * rng.standard_normal(len(lc["ins_vecs"][0])).astype(np.float32))
+    e = svc.insert(v)
+    assert e == svc._next_ext - 1              # counter keeps climbing
+    ids, _ = svc.search_batch(v[None, :], K)
+    assert ids[0, 0] == e
+    svc.delete(e)
+    ids, _ = svc.search_batch(v[None, :], K)
+    assert e not in set(ids.ravel().tolist())

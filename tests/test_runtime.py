@@ -279,3 +279,65 @@ def test_no_shared_dataclass_instance_defaults(tiny_points):
     b = ShardedFrontend.build(tiny_points, 2,
                               params=BAMGParams(r=8, l_build=16, knn_k=8))
     assert a.engines[0].config is not b.engines[0].config
+
+
+# ---------------------------------------------------------------------------
+# streaming-freshness satellites (ISSUE 9): compiled-MERGE small-candidate
+# regression + EDF same-deadline FIFO replay
+# ---------------------------------------------------------------------------
+def test_compiled_merge_fewer_candidates_than_k(fleet):
+    """Regression: with all but one shard masked and a beam override that
+    caps the survivor's rerank below k, the compiled MERGE sees fewer
+    total candidates than k -- it must pad to k, not crash, and the tail
+    must be -1/+inf."""
+    ds, fe = fleet
+    rt = fe.runtime
+    small_l = 4
+    n_valid = rt.engines[0].effective_rerank(small_l)
+    assert n_valid < K                         # the premise of the test
+    for s in (1, 2):
+        rt.mark_down(s)
+    try:
+        ids, d, st = rt.serve_batch(ds.queries, K, with_status=True,
+                                    l=small_l)
+        assert st.shards_up == 1 and st.degraded.all()
+        assert ids.shape == (len(ds.queries), K)
+        assert (ids[:, :n_valid] >= 0).all()   # real results up front...
+        assert (ids[:, n_valid:] == -1).all()  # ...then explicit padding
+        assert np.isinf(d[:, n_valid:]).all()
+        assert (np.diff(d[:, :n_valid], axis=1) >= 0).all()
+        # the survivors are the true per-shard answers, globally mapped
+        oids, od = fe.engines[0].search_batch(ds.queries, n_valid, l=small_l)
+        np.testing.assert_array_equal(ids[:, :n_valid],
+                                      fe._lut[0][np.asarray(oids)])
+        np.testing.assert_array_equal(d[:, :n_valid], od)
+    finally:
+        rt.mark_up(1)
+        rt.mark_up(2)
+
+
+def test_queue_same_deadline_fifo_by_arrival():
+    """Regression: requests with *equal* deadlines must dequeue in arrival
+    order, even when rids are not monotone with arrival (the EDF heap
+    must never fall through to comparing rids or Request objects)."""
+    q = RequestQueue()
+    rids = [5, 3, 9, 1, 7, 0, 8, 2]
+    for i, rid in enumerate(rids):
+        q.push(Request(rid=rid, query=np.zeros(4, np.float32),
+                       arrival=float(i), deadline=1.0))
+    out = q.pop_batch(len(rids))
+    assert [r.rid for r in out] == rids        # FIFO by arrival, not by rid
+
+
+def test_queue_edf_dominates_then_fifo_breaks_ties():
+    """Mixed deadlines: strictly earlier deadline wins; within a deadline
+    class, arrival order is preserved (stable EDF replay)."""
+    q = RequestQueue()
+    seq = [(9, 2.0), (4, 1.0), (7, 2.0), (1, 1.0), (8, 3.0), (0, 2.0)]
+    for i, (rid, dl) in enumerate(seq):
+        q.push(Request(rid=rid, query=np.zeros(2, np.float32),
+                       arrival=float(i), deadline=dl))
+    got = [(r.deadline, r.rid) for r in q.pop_batch(len(seq))]
+    assert got == [(1.0, 4), (1.0, 1), (2.0, 9), (2.0, 7), (2.0, 0),
+                   (3.0, 8)]
+    assert len(q) == 0
