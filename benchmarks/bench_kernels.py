@@ -26,6 +26,11 @@ from repro.kernels.pq_adc import pq_adc, pq_adc_rowwise
 
 KERN_N = int(os.environ.get("REPRO_BENCH_KERN_N", "20000"))
 KERN_HOPS = int(os.environ.get("REPRO_BENCH_KERN_HOPS", "16"))
+# corpus sizes of the resident-vs-streaming sweep (interpret mode on CPU,
+# the Pallas programs on TPU); small defaults -- interpret DMA is slow
+STREAM_N = tuple(int(v) for v in os.environ.get(
+    "REPRO_BENCH_STREAM_N", "1024,4096").split(","))
+STREAM_HOPS = int(os.environ.get("REPRO_BENCH_STREAM_HOPS", "6"))
 
 
 def _time(fn, *args, reps=5):
@@ -68,6 +73,7 @@ def run() -> None:
                 f"gflops={8*4096*16*2/us/1e3:.1f}")
 
     _beam_sweep(rng)
+    _stream_sweep(rng)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops",))
@@ -127,6 +133,59 @@ def _beam_sweep(rng) -> None:
                 f"hops_per_s={hps:.0f}")
     common.emit("kernel.beam_fused.b64l64r32.speedup", round(u / f, 2),
                 f"pools_identical={match}")
+
+
+def _stream_sweep(rng) -> None:
+    """Resident vs HBM-streaming fused hop loop over corpus size N.
+
+    On CPU both run the Pallas program in interpret mode (same code path,
+    so the ratio isolates the DMA/chunk-walk structure; absolute numbers
+    are TPU-only).  The VMEM budget the auto backend would compare
+    against is pinned to the resident footprint at the *smallest* N, so
+    the sweep honestly crosses it: the first point fits (auto would run
+    resident), the later points do not (auto would stream), and each row
+    reports both footprints + the fit bit.  Outputs are asserted
+    bit-identical between the two programs at every N."""
+    from repro.kernels.beam_fused import stream_vmem_bytes, vmem_bytes
+    on_tpu = jax.default_backend() == "tpu"
+    res_bk, str_bk = (("pallas", "stream") if on_tpu
+                      else ("interpret", "stream_interpret"))
+    b, l, r, m, k, hops = 8, 32, 32, 16, 256, STREAM_HOPS
+    n_chunk = 512
+    dims = dict(m=m, k=k, l=l, max_hops=hops, tile_b=8, n_chunk=n_chunk)
+    budget = vmem_bytes(min(STREAM_N), r, **dims)
+    for n in sorted(STREAM_N):
+        adj = jnp.asarray(rng.integers(0, n, (n, r)), jnp.int32)
+        codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.int32)
+        tables = jnp.asarray(rng.random((b, m, k)), jnp.float32)
+        seeds = np.sort(rng.choice(n, (b, 4), replace=False)
+                        .astype(np.int32), 1)
+        pool_ids = jnp.full((b, l), -1, jnp.int32).at[:, :4].set(seeds)
+        pool_d = jnp.full((b, l), jnp.inf, jnp.float32).at[:, :4].set(
+            jnp.asarray(np.sort(rng.random((b, 4)), axis=1), jnp.float32))
+        pool_exp = jnp.zeros((b, l), bool)
+        args = (adj, pool_ids, pool_d, pool_exp)
+
+        def hop(backend):
+            return lambda *a: beam_hops(*a, hops, tables=tables,
+                                        codes=codes, backend=backend,
+                                        n_chunk=n_chunk)
+
+        t_res = _time(hop(res_bk), *args, reps=2)
+        t_str = _time(hop(str_bk), *args, reps=2)
+        o_res = hop(res_bk)(*args)
+        o_str = hop(str_bk)(*args)
+        match = all(bool(jnp.array_equal(x, y))
+                    for x, y in zip(o_res, o_str))
+        assert match, f"stream pools diverged from resident at n={n}"
+        vb, sb = vmem_bytes(n, r, **dims), stream_vmem_bytes(n, r, **dims)
+        common.emit(
+            f"kernel.beam_stream.n{n}.hop_us", round(t_str / hops, 1),
+            f"resident_hop_us={t_res / hops:.1f};"
+            f"overhead={t_str / t_res:.2f}x;"
+            f"vmem_resident={vb};vmem_stream={sb};"
+            f"fits_budget={int(vb <= budget)};bit_identical={int(match)};"
+            f"backend={str_bk}")
 
 
 if __name__ == "__main__":

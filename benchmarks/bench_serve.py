@@ -103,6 +103,43 @@ def run() -> None:
                 round(per_hop["ref"] / per_hop["fused"], 2),
                 "unfused_scan_vs_fused_kernel")
 
+    # --- resident/streaming crossover of the auto backend -----------------
+    # the resident footprint is linear in N; report the corpus size where
+    # backend="auto" on TPU would switch from "fused" to "fused_stream"
+    # for this index's serving shape, plus both footprints at the bench N
+    from repro.kernels import beam_fused
+    arrs = idx.batch_arrays()
+    n, r = arrs["adj"].shape
+    m = arrs["codes"].shape[1]
+    dims = dict(m=m, k=256, l=L, max_hops=32)
+    budget = beam_fused.vmem_budget_bytes()
+    base = beam_fused.vmem_bytes(0, r, **dims)
+    per_row = (r + m) * 4
+    cross_n = max(0, budget - base) // per_row + 1
+    common.emit("serve.fused.vmem_crossover_n", int(cross_n),
+                f"budget={budget};resident_at_bench_n="
+                f"{beam_fused.vmem_bytes(n, r, **dims)};stream_at_bench_n="
+                f"{beam_fused.stream_vmem_bytes(n, r, **dims)};n={n};r={r};"
+                f"m={m}")
+
+    # --- streaming parity: the HBM-streaming hop program (interpret mode
+    # on CPU) must land on the identical top-k as the unfused scan
+    scfg = dict(l=16, max_hops=8)
+    e_ref = BatchedANNEngine.from_index(
+        idx, EngineConfig(backend="ref", **scfg))
+    e_str = BatchedANNEngine.from_index(
+        idx, EngineConfig(backend="fused_stream_interpret", **scfg))
+    qs = ds.queries[:8]
+    t0 = time.perf_counter()
+    sids, _ = e_str.search_batch(qs, K)
+    stream_s = time.perf_counter() - t0
+    rids, _ = e_ref.search_batch(qs, K)
+    assert (sids == rids).all(), "streaming engine diverged from unfused"
+    common.emit("serve.fused_stream.parity",
+                round(recall_at_k(sids, ds.gt[:8], K), 3),
+                f"bit_identical=1;l={scfg['l']};compile_plus_run_s="
+                f"{stream_s:.1f}")
+
     # --- degraded-mode serving: kill one shard of a sharded front-end -----
     fe = ShardedFrontend.build(ds.base, n_shards=3,
                                params=BAMGParams(r=16, l_build=32, seed=0),

@@ -119,6 +119,40 @@ def sweep(idx, regime: str, ls=(12, 24, 48, 96), k: int = 10, **kw):
     return out
 
 
+# every emit() lands here too, so run.py --json can dump the whole suite
+# run as one machine-readable artifact (list of {name, value, derived})
+ROWS: list[dict] = []
+
+
 def emit(name: str, value, derived: str = "") -> None:
     """CSV row in the harness convention: name,us_per_call,derived."""
     print(f"{name},{value},{derived}")
+    ROWS.append({"name": name, "value": value, "derived": derived})
+
+
+def env_metadata() -> dict:
+    """Environment snapshot stored alongside --json rows: enough to tell
+    two artifact files apart (host class, library versions, the REPRO_*
+    knobs that scale the suites, and the git revision when available)."""
+    import platform
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(__file__), timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "jax_backend": jax.default_backend(),
+        "git_sha": sha,
+        "env": {k: v for k, v in sorted(os.environ.items())
+                if k.startswith("REPRO_")},
+    }

@@ -1,11 +1,17 @@
 """Run every benchmark; print ``name,value,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2]
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2] \
+      [--json BENCH.json]
 
 One module per paper table/figure (DESIGN.md §6).  REPRO_BENCH_N scales
-corpus sizes (default 4000 -- single-core-CPU friendly).
+corpus sizes (default 4000 -- single-core-CPU friendly).  --json writes
+every emitted row (tagged with its suite) plus an environment-metadata
+block to the given path -- the machine-readable artifact CI uploads, so
+runs are diffable across commits without scraping stdout.
 """
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -14,12 +20,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="write suite rows + env metadata to this path")
     args = ap.parse_args()
 
     from . import (bench_ablation, bench_alpha, bench_beta, bench_degrees,
                    bench_fresh, bench_indexing, bench_io_pipeline,
                    bench_kernels, bench_memory, bench_nio_recall,
-                   bench_qps_recall, bench_roofline, bench_serve)
+                   bench_qps_recall, bench_roofline, bench_serve, common)
 
     suites = [
         ("fig4", bench_qps_recall.run),
@@ -46,14 +54,30 @@ def main() -> None:
         if only and not any(o in name for o in only):
             continue
         t0 = time.time()
+        row0 = len(common.ROWS)
         try:
             fn()
-            print(f"bench.{name}.wall_s,{time.time()-t0:.1f},ok")
+            status = "ok"
         except Exception as e:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
-            print(f"bench.{name}.wall_s,{time.time()-t0:.1f},"
-                  f"FAILED:{type(e).__name__}")
+            status = f"FAILED:{type(e).__name__}"
+        wall = time.time() - t0
+        print(f"bench.{name}.wall_s,{wall:.1f},{status}")
+        for row in common.ROWS[row0:]:
+            row["suite"] = name
+        common.ROWS.append({"name": f"bench.{name}.wall_s",
+                            "value": round(wall, 1), "derived": status,
+                            "suite": name})
+    if args.json:     # written even on failure: partial rows still diff
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"meta": common.env_metadata(), "rows": common.ROWS},
+                      f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows -> {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

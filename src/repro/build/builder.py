@@ -37,7 +37,7 @@ from .prune import robust_prune_batch
 
 BACKENDS = ("host", "batched")
 FRONTIER_BACKENDS = ("batched", "fused", "fused_pallas", "fused_interpret",
-                     "fused_ref")
+                     "fused_ref", "fused_stream", "fused_stream_interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +50,10 @@ class BuildConfig:
     knn_mode: str = "clustered"  # batched NSG kNN stage: "clustered"|"exact"
     # candidate-beam implementation for the batched backend: "batched"
     # (seen-mask beam) or "fused"/"fused_pallas"/"fused_interpret"/
-    # "fused_ref" (the serve engine's fused hop kernel at width 1,
-    # repro.kernels.beam_fused; beam_width is then ignored)
+    # "fused_ref"/"fused_stream"/"fused_stream_interpret" (the serve
+    # engine's fused hop kernel at width 1, repro.kernels.beam_fused;
+    # beam_width is then ignored -- the fused_stream* modes stream the
+    # corpus from HBM so construction frontiers scale past VMEM too)
     frontier_backend: str = "batched"
 
     def __post_init__(self):

@@ -48,14 +48,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.beam_fused.ops import beam_hops
-
 from .chunking import map_chunks
 from .pool import pool_merge
 
 # frontier_pools backend -> the beam_hops backend the fused path pins
+# (the `fused_stream*` modes run the HBM-streaming double-buffered
+# program, for corpora whose resident footprint exceeds the VMEM budget)
 _FUSED = {"fused": "auto", "fused_pallas": "pallas",
-          "fused_interpret": "interpret", "fused_ref": "ref"}
+          "fused_interpret": "interpret", "fused_ref": "ref",
+          "fused_stream": "stream", "fused_stream_interpret":
+          "stream_interpret"}
 
 
 @functools.partial(jax.jit, static_argnames=("ef", "max_hops", "width"))
@@ -156,6 +158,9 @@ def _frontier_batch_fused(x, n2, adj, entries, queries,
     scoring -- bit-identical to `_frontier_batch`'s `score`), and return
     the per-hop frontier trace stable-sorted ascending by distance.
     """
+    # deferred: repro.build <-> repro.kernels.beam_fused import cycle
+    # (beam_fused.ref consumes repro.build.pool)
+    from repro.kernels.beam_fused.ops import beam_hops
     b = queries.shape[0]
     q = queries.astype(jnp.float32)
     qn = jnp.sum(q * q, axis=1)
@@ -209,9 +214,12 @@ def frontier_pools(
     of x.
 
     backend: "batched" (the seen-mask beam above) or one of
-    "fused"/"fused_pallas"/"fused_interpret"/"fused_ref" -- the fused
-    beam-hop kernel at width 1 (`width` is ignored; hop count defaults to
-    the width-1 `default_hops`, so pass `max_hops` to bound it).
+    "fused"/"fused_pallas"/"fused_interpret"/"fused_ref"/"fused_stream"/
+    "fused_stream_interpret" -- the fused beam-hop kernel at width 1
+    (`width` is ignored; hop count defaults to the width-1
+    `default_hops`, so pass `max_hops` to bound it).  The `fused_stream*`
+    modes run the HBM-streaming double-buffered program, for build
+    corpora whose resident footprint exceeds the VMEM budget.
     """
     if backend != "batched" and backend not in _FUSED:
         raise ValueError(f"frontier backend must be 'batched' or one of "

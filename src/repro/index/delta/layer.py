@@ -22,6 +22,7 @@ write traffic of one consolidation epoch, not the corpus.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Optional
 
 import heapq
@@ -29,6 +30,8 @@ import heapq
 import numpy as np
 
 from repro.build.prune import robust_prune_inc
+
+_LOG = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +42,10 @@ class DeltaParams:
     prune_alpha: float = 1.2   # RobustPrune slack for insert wiring
     max_steps: Optional[int] = None   # insert-beam hop cap (None = none)
     grow: float = 1.5          # geometric growth factor of the vector buffer
+    # overlay pressure guard: warn (once per crossing) when the write
+    # traffic -- inserts + tombstones -- exceeds this fraction of the
+    # frozen base, the signal that a consolidation epoch is overdue
+    warn_fraction: float = 0.25
 
 
 class DeltaLayer:
@@ -65,6 +72,7 @@ class DeltaLayer:
         self._n = self.n_base
         self.overrides: dict[int, np.ndarray] = {}
         self.tombstones: set[int] = set()
+        self._pressure_warned = False
 
     # --- structure ----------------------------------------------------------
     @property
@@ -104,6 +112,35 @@ class DeltaLayer:
     def memory_bytes(self) -> int:
         ov = sum(r.nbytes for r in self.overrides.values())
         return self._x[:self._n].nbytes + ov + 8 * len(self.tombstones)
+
+    @property
+    def overlay_fraction(self) -> float:
+        """Write traffic held by the overlay as a fraction of the frozen
+        base: (inserts + tombstones) / n_base.  The overlay is sized for
+        one consolidation epoch; past `params.warn_fraction` its exact-
+        distance RAM search starts to dominate and freshness claims the
+        blue/green consolidation was supposed to bound stop holding."""
+        return (self.n_delta + len(self.tombstones)) / max(1, self.n_base)
+
+    @property
+    def overlay_pressure(self) -> bool:
+        """Whether the overlay exceeds the configured pressure fraction."""
+        return self.overlay_fraction > self.params.warn_fraction
+
+    def _check_pressure(self) -> None:
+        """Warn once per crossing (re-arms if the overlay shrinks, i.e.
+        after consolidation swaps in a fresh layer)."""
+        if not self.overlay_pressure:
+            self._pressure_warned = False
+            return
+        if not self._pressure_warned:
+            self._pressure_warned = True
+            _LOG.warning(
+                "delta overlay holds %d inserts + %d tombstones = %.1f%% of "
+                "the %d-point base (warn_fraction=%.0f%%); consolidate soon",
+                self.n_delta, len(self.tombstones),
+                100.0 * self.overlay_fraction, self.n_base,
+                100.0 * self.params.warn_fraction)
 
     # --- writes -------------------------------------------------------------
     def _grow_to(self, n: int) -> None:
@@ -150,6 +187,7 @@ class DeltaLayer:
                                            r=p.r, alpha=p.prune_alpha)
                 self.overrides[u] = row
             out[i] = vid
+        self._check_pressure()
         return out
 
     def delete(self, vid: int) -> None:
@@ -158,6 +196,7 @@ class DeltaLayer:
         if not (0 <= vid < self._n):
             raise KeyError(f"delete: id {vid} not in [0, {self._n})")
         self.tombstones.add(int(vid))
+        self._check_pressure()
 
     def delete_batch(self, vids) -> None:
         for v in np.asarray(vids, np.int64).tolist():

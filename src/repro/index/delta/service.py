@@ -95,6 +95,23 @@ class FreshService:
     def n_live(self) -> int:
         return self.delta.n_total - len(self.delta.tombstones)
 
+    def stats(self) -> dict:
+        """Freshness health snapshot: overlay size vs the frozen base,
+        plus whether the overlay-pressure guard has tripped (the operator
+        signal that a `consolidate()` epoch is overdue)."""
+        d = self.delta
+        return {
+            "generation": len(self.manager.history()) - 1,
+            "n_base": d.n_base,
+            "n_delta": d.n_delta,
+            "n_tombstones": len(d.tombstones),
+            "n_live": self.n_live,
+            "overlay_fraction": d.overlay_fraction,
+            "overlay_pressure": d.overlay_pressure,
+            "warn_fraction": d.params.warn_fraction,
+            "overlay_memory_bytes": d.memory_bytes(),
+        }
+
     def live_corpus(self) -> tuple[np.ndarray, np.ndarray]:
         """(vectors, external ids) of every live point, internal order --
         the corpus an equivalent from-scratch build would be given."""

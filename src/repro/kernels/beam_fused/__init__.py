@@ -1,2 +1,5 @@
-from .ops import beam_hops  # noqa: F401
+from .kernel import (beam_hops_adc_pallas, beam_hops_adc_stream,  # noqa: F401
+                     beam_hops_l2_pallas, beam_hops_l2_stream, fits_vmem,
+                     stream_vmem_bytes, vmem_budget_bytes, vmem_bytes)
+from .ops import BACKENDS, beam_hops  # noqa: F401
 from .ref import beam_hops_ref  # noqa: F401

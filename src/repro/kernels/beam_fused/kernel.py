@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: the fused beam-hop serve loop, VMEM-resident.
+"""Pallas TPU kernel: the fused beam-hop serve loop, resident or streamed.
 
 One grid step owns a TB-row query tile and runs the *entire* hop loop --
 frontier select, adjacency gather, neighbor scoring, pool merge -- as a
@@ -12,10 +12,10 @@ a one-hot contraction -- the `pq_adc` trick applied throughout):
 - **frontier select**: the pool is kept sorted, so the pop is the first
   unexpanded valid entry -- a masked iota min + one-hot readout, no
   argsort.
-- **adjacency / code / vector gather**: rows are pulled from the
-  VMEM-resident corpus arrays by one-hot @ matrix MXU contractions,
-  chunked over N (`n_chunk`) so the one-hot tile, not the corpus, bounds
-  the live footprint.
+- **adjacency / code / vector gather**: rows are pulled from the corpus
+  arrays by one-hot @ matrix MXU contractions, chunked over N
+  (`n_chunk`) so the one-hot tile, not the corpus, bounds the live
+  footprint.
 - **scoring**: mode="adc" inlines the `pq_adc_rowwise` one-hot LUT
   lookup against the tile's private (TB, M, K) tables; mode="l2" is the
   build frontier's dot-form exact distance vs (N, D+1) vectors carrying
@@ -28,23 +28,127 @@ Every hop also records its frontier pick into a (TB, max_hops) trace
 (the build frontier's visited set), and the program ends by emitting the
 *next* frontier pick and a done mask so callers can chain hop programs.
 
-VMEM budget per grid step: the corpus blocks N*(R + M + 1)*4 bytes (adc)
-or N*(R + D + 1 + 1)*4 (l2) plus the (TB*R, n_chunk) gather one-hot and
-(TB, R|L, L) merge tensors -- a 100k-node shard at R=32, M=16 is ~20 MB,
-so shard via `serve.frontend.ShardedFrontend` before N outgrows VMEM
-(streaming the corpus through HBM DMA is the documented next step).
+Two execution modes share the hop loop and differ only in where the
+corpus lives:
+
+- **resident** (`beam_hops_{adc,l2}_pallas`): adjacency + codes/vectors
+  are VMEM blocks, gather chunks come from `dynamic_slice`.  Footprint
+  per grid step is N*(R + M)*4 bytes (adc) or N*(R + D + 1)*4 (l2) plus
+  the (TB*R, n_chunk) gather one-hot and (TB, R|L, L) merge tensors --
+  see `vmem_bytes`.  A 100k-node shard at R=32, M=16 is ~20 MB, past
+  most cores' VMEM.
+- **streaming** (`beam_hops_{adc,l2}_stream`): the corpus stays in HBM
+  (`memory_space=ANY`); every gather walks it in `n_chunk`-row slabs
+  DMA'd into a double-buffered VMEM scratch (`pltpu.make_async_copy`:
+  the copy for slab i+1 is issued before the one-hot tile contracts
+  slab i, so the MXU and the DMA engine overlap).  Footprint is
+  `stream_vmem_bytes` -- O(n_chunk), independent of N -- which is what
+  lets one grid step serve a shard far larger than VMEM instead of
+  requiring `serve.frontend.ShardedFrontend` to slice the corpus down
+  to fast-memory size.  The slab walk order and slab contents are
+  identical to the resident gather's chunk loop, so both modes are
+  bit-identical on every output (streaming changes timing and memory
+  traffic, never results).
+
 Ids and flags travel as exact f32 (N < 2^24) so every stage stays on
 the VPU/MXU datapath.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _SENT = float(2 ** 31)   # f32 id sentinel: -1 ids rank last, like pool_merge
+
+# resident-fused VMEM budget the auto backend compares `vmem_bytes`
+# against; ~16 MiB is a safe per-core figure across TPU generations
+_DEFAULT_VMEM_BUDGET = 16 * 2 ** 20
+
+
+def vmem_budget_bytes() -> int:
+    """The resident-fused VMEM budget (bytes); REPRO_VMEM_BUDGET overrides."""
+    return int(os.environ.get("REPRO_VMEM_BUDGET", _DEFAULT_VMEM_BUDGET))
+
+
+def _mode_dims(m, d):
+    if (m is None) == (d is None):
+        raise ValueError("pass exactly one of m= (adc mode) / d= (l2 mode)")
+    # corpus row width beyond adjacency: codes (M) or vectors+norm (D+1)
+    return (m, 0) if m is not None else (d + 1, d)
+
+
+def vmem_bytes(n: int, r: int, *, m: int | None = None, d: int | None = None,
+               l: int = 64, max_hops: int = 32, tile_b: int = 8,
+               n_chunk: int = 2048, k: int = 256) -> int:
+    """Estimated VMEM footprint (bytes) of one *resident* fused grid step.
+
+    n/r: padded corpus rows and adjacency width; exactly one of m (PQ
+    subquantizers, adc mode) / d (vector dim, l2 mode); l the pool
+    width, k the PQ centroid count.  Terms: the VMEM-resident corpus
+    blocks (the part streaming eliminates), the per-tile private
+    operands (ADC tables / query tile), the (TB*R, n_chunk) gather
+    one-hot, the (TB, R, K) score one-hot (adc), the merge rank/scatter
+    tensors, and the pool + trace state.
+    """
+    row_w, dd = _mode_dims(m, d)
+    f = 4
+    corpus = n * (r + row_w) * f
+    if m is not None:
+        private = tile_b * m * k * f               # (TB, M, K) ADC tables
+        score = tile_b * r * k * f                 # (TB, R, K) LUT one-hot
+    else:
+        private = tile_b * dd * f                  # (TB, D) query tile
+        score = tile_b * r * (dd + 1) * f          # gathered rows + dots
+    gather = tile_b * r * n_chunk * f              # (TB*R, n_chunk) one-hot
+    merge = 4 * tile_b * (l * l + 2 * r * l + r * r) * f
+    state = (6 * tile_b * l + 4 * tile_b * max_hops) * f
+    return corpus + private + score + gather + merge + state
+
+
+def stream_vmem_bytes(n: int, r: int, *, m: int | None = None,
+                      d: int | None = None, l: int = 64, max_hops: int = 32,
+                      tile_b: int = 8, n_chunk: int = 2048,
+                      k: int = 256) -> int:
+    """Estimated VMEM footprint of one *streaming* fused grid step: the
+    resident estimate minus the corpus blocks, plus the two double-
+    buffered (2, n_chunk, R|row_w) DMA slabs -- O(n_chunk), not O(n)."""
+    row_w, _ = _mode_dims(m, d)
+    resident = vmem_bytes(n, r, m=m, d=d, l=l, max_hops=max_hops,
+                          tile_b=tile_b, n_chunk=n_chunk, k=k)
+    f = 4
+    return resident - n * (r + row_w) * f + 2 * n_chunk * (r + row_w) * f
+
+
+def fits_vmem(n: int, r: int, *, m: int | None = None, d: int | None = None,
+              l: int = 64, max_hops: int = 32, tile_b: int = 8,
+              n_chunk: int = 2048, k: int = 256,
+              budget: int | None = None) -> bool:
+    """Whether the resident fused kernel's footprint fits the VMEM budget
+    (the `backend="auto"` rule: resident when it fits, streaming when
+    not)."""
+    budget = vmem_budget_bytes() if budget is None else int(budget)
+    return vmem_bytes(n, r, m=m, d=d, l=l, max_hops=max_hops, tile_b=tile_b,
+                      n_chunk=n_chunk, k=k) <= budget
+
+
+def _check_tiling(b: int, tile_b: int, n: int, n_chunk: int) -> None:
+    """Public-kernel shape contract, raised (not asserted: asserts vanish
+    under `python -O`, and these kernels are callable without the
+    ops-layer padding)."""
+    if tile_b <= 0 or b % tile_b != 0:
+        raise ValueError(
+            f"pool batch b={b} is not divisible by tile_b={tile_b}; pad the "
+            f"pool rows to a tile_b multiple (ops.beam_hops does this)")
+    if n_chunk <= 0 or n % n_chunk != 0:
+        raise ValueError(
+            f"corpus rows n={n} are not divisible by n_chunk={n_chunk}; pad "
+            f"the corpus arrays to an n_chunk multiple (ops.beam_hops does "
+            f"this)")
 
 
 def _gather_rows(ids_col, mat, n: int, n_chunk: int):
@@ -66,6 +170,43 @@ def _gather_rows(ids_col, mat, n: int, n_chunk: int):
 
     return jax.lax.fori_loop(0, n // n_chunk, body,
                              jnp.zeros((s, c), jnp.float32))
+
+
+def _gather_rows_stream(ids_col, hbm_ref, buf, sem, n: int, n_chunk: int):
+    """`_gather_rows` with the corpus in HBM: the slab for chunk i is
+    DMA'd into one slot of the (2, n_chunk, C) VMEM scratch `buf` while
+    the one-hot tile contracts the other slot (double buffering --
+    `make_async_copy` for slab i+1 is started before the wait on slab i).
+    Same chunk order and contents as the resident gather, so the f32
+    accumulation -- and therefore every downstream output -- is
+    bit-identical."""
+    s = ids_col.shape[0]
+    c = hbm_ref.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.float32, (s, n_chunk), 1)
+    num = n // n_chunk
+
+    def dma(slot, ci):
+        return pltpu.make_async_copy(
+            hbm_ref.at[pl.ds(ci * n_chunk, n_chunk), :],
+            buf.at[slot], sem.at[slot])
+
+    dma(0, 0).start()
+
+    def body(ci, acc):
+        slot = jax.lax.rem(ci, 2)
+
+        @pl.when(ci + 1 < num)
+        def _():
+            dma(jax.lax.rem(ci + 1, 2), ci + 1).start()
+
+        dma(slot, ci).wait()
+        off = (ci * n_chunk).astype(jnp.float32)
+        onehot = (col + off == ids_col).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            onehot, buf[slot], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.lax.fori_loop(0, num, body, jnp.zeros((s, c), jnp.float32))
 
 
 def _merge_ranked(pids, pd, pexp, cids, cd, tb: int, l: int, r: int):
@@ -112,15 +253,15 @@ def _merge_ranked(pids, pd, pexp, cids, cd, tb: int, l: int, r: int):
     return out_ids, out_d, out_exp
 
 
-def _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
-              *, max_hops: int, n: int, n_chunk: int):
-    """Shared hop loop; `score(nbrs, valid) -> (TB, R)` closes over the
+def _hop_loop(gather_adj, ids_ref, d_ref, exp_ref, score, outs,
+              *, max_hops: int, r: int):
+    """Shared hop loop; `gather_adj(v_col (TB, 1)) -> (TB, R)` pulls the
+    frontier adjacency rows (resident dynamic_slice chunks or streamed
+    HBM slabs) and `score(nbrs, valid) -> (TB, R)` closes over the
     mode-specific operands.  Writes the eight output refs in `outs`."""
     (oi_ref, od_ref, oe_ref, oh_ref, oti_ref, otd_ref,
      onx_ref, odn_ref) = outs
     tb, l = ids_ref.shape
-    r = adj_ref.shape[1]
-    adj_f = adj_ref[...]
     iota_l = jax.lax.broadcasted_iota(jnp.int32, (tb, l), 1)
     iota_h = jax.lax.broadcasted_iota(jnp.int32, (tb, max_hops), 1)
 
@@ -137,7 +278,7 @@ def _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
         ids, d, exp, hops, tid, td = carry
         onej, has, v, vd = pick(ids, d, exp)
         exp = jnp.maximum(exp, onej.astype(jnp.float32))
-        nbrs = _gather_rows(v[:, None], adj_f, n, n_chunk)      # (TB, R)
+        nbrs = gather_adj(v[:, None])                           # (TB, R)
         nbrs = jnp.where(has[:, None], nbrs, -1.0)
         nd = score(nbrs, nbrs >= 0.0)
         ids, d, exp = _merge_ranked(ids, d, exp, nbrs, nd, tb, l, r)
@@ -164,18 +305,16 @@ def _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
     odn_ref[...] = (~has).astype(jnp.int32)[:, None]
 
 
-def _beam_adc_kernel(adj_ref, codes_ref, tables_ref, ids_ref, d_ref, exp_ref,
-                     *outs, max_hops: int, n: int, n_chunk: int):
-    tb = ids_ref.shape[0]
-    r = adj_ref.shape[1]
-    m_sub, k_cent = tables_ref.shape[1], tables_ref.shape[2]
-    codes_f = codes_ref[...]
-    tables = tables_ref[...]
+def _adc_score_from(gather_codes, tables, tb: int, r: int):
+    """ADC scoring closure shared by the resident and streaming kernels:
+    gather the frontier neighbors' PQ codes, then the `pq_adc_rowwise`
+    one-hot LUT lookup against the tile's private (TB, M, K) tables."""
+    m_sub, k_cent = tables.shape[1], tables.shape[2]
     kio = jax.lax.broadcasted_iota(jnp.int32, (tb, r, k_cent), 2)
 
     def score(nbrs, valid):
         nbc = jnp.maximum(nbrs, 0.0).reshape(tb * r, 1)
-        ncodes = _gather_rows(nbc, codes_f, n, n_chunk)          # (TB*R, M)
+        ncodes = gather_codes(nbc)                               # (TB*R, M)
         ncodes = ncodes.astype(jnp.int32).reshape(tb, r, m_sub)
 
         def body(mi, acc):
@@ -189,22 +328,17 @@ def _beam_adc_kernel(adj_ref, codes_ref, tables_ref, ids_ref, d_ref, exp_ref,
                                jnp.zeros((tb, r), jnp.float32))
         return jnp.where(valid, nd, jnp.inf)
 
-    _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
-              max_hops=max_hops, n=n, n_chunk=n_chunk)
+    return score
 
 
-def _beam_l2_kernel(adj_ref, xn_ref, q_ref, ids_ref, d_ref, exp_ref,
-                    *outs, max_hops: int, n: int, n_chunk: int):
-    tb = ids_ref.shape[0]
-    r = adj_ref.shape[1]
-    dd = xn_ref.shape[1] - 1                     # last column = squared norm
-    xn = xn_ref[...]
-    q = q_ref[...]
+def _l2_score_from(gather_xn, q, dd: int, tb: int, r: int):
+    """Exact-L2 scoring closure shared by the resident and streaming
+    kernels: gather (vector, squared-norm) rows, dot-form distance."""
     qn = jnp.sum(q * q, axis=1)
 
     def score(nbrs, valid):
         nbc = jnp.maximum(nbrs, 0.0).reshape(tb * r, 1)
-        rows = _gather_rows(nbc, xn, n, n_chunk)                 # (TB*R, D+1)
+        rows = gather_xn(nbc)                                    # (TB*R, D+1)
         vecs = rows[:, :dd].reshape(tb, r, dd)
         n2g = rows[:, dd].reshape(tb, r)
         dot = jax.lax.dot_general(vecs, q, (((2,), (1,)), ((0,), (0,))),
@@ -212,8 +346,72 @@ def _beam_l2_kernel(adj_ref, xn_ref, q_ref, ids_ref, d_ref, exp_ref,
         dist = jnp.maximum(n2g - 2.0 * dot + qn[:, None], 0.0)
         return jnp.where(valid, dist, jnp.inf)
 
-    _hop_loop(adj_ref, ids_ref, d_ref, exp_ref, score, outs,
-              max_hops=max_hops, n=n, n_chunk=n_chunk)
+    return score
+
+
+def _beam_adc_kernel(adj_ref, codes_ref, tables_ref, ids_ref, d_ref, exp_ref,
+                     *outs, max_hops: int, n: int, n_chunk: int):
+    tb = ids_ref.shape[0]
+    r = adj_ref.shape[1]
+    adj_f = adj_ref[...]
+    codes_f = codes_ref[...]
+    score = _adc_score_from(
+        lambda ids: _gather_rows(ids, codes_f, n, n_chunk),
+        tables_ref[...], tb, r)
+    _hop_loop(lambda v: _gather_rows(v, adj_f, n, n_chunk),
+              ids_ref, d_ref, exp_ref, score, outs,
+              max_hops=max_hops, r=r)
+
+
+def _beam_l2_kernel(adj_ref, xn_ref, q_ref, ids_ref, d_ref, exp_ref,
+                    *outs, max_hops: int, n: int, n_chunk: int):
+    tb = ids_ref.shape[0]
+    r = adj_ref.shape[1]
+    dd = xn_ref.shape[1] - 1                     # last column = squared norm
+    adj_f = adj_ref[...]
+    xn = xn_ref[...]
+    score = _l2_score_from(lambda ids: _gather_rows(ids, xn, n, n_chunk),
+                           q_ref[...], dd, tb, r)
+    _hop_loop(lambda v: _gather_rows(v, adj_f, n, n_chunk),
+              ids_ref, d_ref, exp_ref, score, outs,
+              max_hops=max_hops, r=r)
+
+
+def _beam_adc_stream_kernel(adj_ref, codes_ref, tables_ref, ids_ref, d_ref,
+                            exp_ref, *outs_scratch,
+                            max_hops: int, n: int, n_chunk: int):
+    """ADC hop loop with adj/codes left in HBM (`memory_space=ANY`) and
+    every gather streamed through the double-buffered DMA scratch."""
+    *outs, adj_buf, adj_sem, code_buf, code_sem = outs_scratch
+    tb = ids_ref.shape[0]
+    r = adj_ref.shape[1]
+    score = _adc_score_from(
+        lambda ids: _gather_rows_stream(ids, codes_ref, code_buf, code_sem,
+                                        n, n_chunk),
+        tables_ref[...], tb, r)
+    _hop_loop(lambda v: _gather_rows_stream(v, adj_ref, adj_buf, adj_sem,
+                                            n, n_chunk),
+              ids_ref, d_ref, exp_ref, score, tuple(outs),
+              max_hops=max_hops, r=r)
+
+
+def _beam_l2_stream_kernel(adj_ref, xn_ref, q_ref, ids_ref, d_ref, exp_ref,
+                           *outs_scratch,
+                           max_hops: int, n: int, n_chunk: int):
+    """Exact-L2 hop loop with adj/vectors left in HBM and every gather
+    streamed through the double-buffered DMA scratch."""
+    *outs, adj_buf, adj_sem, xn_buf, xn_sem = outs_scratch
+    tb = ids_ref.shape[0]
+    r = adj_ref.shape[1]
+    dd = xn_ref.shape[1] - 1
+    score = _l2_score_from(
+        lambda ids: _gather_rows_stream(ids, xn_ref, xn_buf, xn_sem,
+                                        n, n_chunk),
+        q_ref[...], dd, tb, r)
+    _hop_loop(lambda v: _gather_rows_stream(v, adj_ref, adj_buf, adj_sem,
+                                            n, n_chunk),
+              ids_ref, d_ref, exp_ref, score, tuple(outs),
+              max_hops=max_hops, r=r)
 
 
 def _out_shapes(b, l, max_hops):
@@ -249,7 +447,7 @@ def beam_hops_adc_pallas(adj, codes, tables, pool_ids, pool_d, pool_exp,
     Returns the 8-tuple of `_out_shapes` (hops/next/done as (B, 1))."""
     b, l = pool_ids.shape
     n = adj.shape[0]
-    assert b % tile_b == 0 and n % n_chunk == 0, (b, tile_b, n, n_chunk)
+    _check_tiling(b, tile_b, n, n_chunk)
     full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
     return pl.pallas_call(
         functools.partial(_beam_adc_kernel, max_hops=max_hops, n=n,
@@ -279,7 +477,7 @@ def beam_hops_l2_pallas(adj, xn, queries, pool_ids, pool_d, pool_exp,
     contract as `beam_hops_adc_pallas` with exact-L2 scoring."""
     b, l = pool_ids.shape
     n = adj.shape[0]
-    assert b % tile_b == 0 and n % n_chunk == 0, (b, tile_b, n, n_chunk)
+    _check_tiling(b, tile_b, n, n_chunk)
     full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
     return pl.pallas_call(
         functools.partial(_beam_l2_kernel, max_hops=max_hops, n=n,
@@ -295,5 +493,80 @@ def beam_hops_l2_pallas(adj, xn, queries, pool_ids, pool_d, pool_exp,
         ],
         out_specs=_out_specs(tile_b, l, max_hops),
         out_shape=_out_shapes(b, l, max_hops),
+        interpret=interpret,
+    )(adj, xn, queries, pool_ids, pool_d, pool_exp)
+
+
+def _stream_scratch(n_chunk: int, r: int, row_w: int):
+    """Double-buffered DMA scratch: (2, n_chunk, C) slab pairs + their
+    completion semaphores, for the adjacency and the codes/vector gathers."""
+    return [pltpu.VMEM((2, n_chunk, r), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((2, n_chunk, row_w), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,))]
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "tile_b", "n_chunk",
+                                             "interpret"))
+def beam_hops_adc_stream(adj, codes, tables, pool_ids, pool_d, pool_exp,
+                         max_hops: int, tile_b: int = 8, n_chunk: int = 2048,
+                         interpret: bool = False):
+    """`beam_hops_adc_pallas` with adj/codes streamed from HBM: the corpus
+    operands get `memory_space=ANY` block specs (never staged into VMEM by
+    the pipeline) and each gather DMA-copies `n_chunk`-row slabs into a
+    double-buffered VMEM scratch.  Bit-identical outputs to the resident
+    kernel at every config; VMEM footprint is `stream_vmem_bytes` --
+    independent of N, so shards far larger than VMEM serve from one grid
+    step."""
+    b, l = pool_ids.shape
+    n = adj.shape[0]
+    _check_tiling(b, tile_b, n, n_chunk)
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    return pl.pallas_call(
+        functools.partial(_beam_adc_stream_kernel, max_hops=max_hops, n=n,
+                          n_chunk=n_chunk),
+        grid=(b // tile_b,),
+        in_specs=[
+            any_spec,
+            any_spec,
+            pl.BlockSpec((tile_b,) + tables.shape[1:], lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+        ],
+        out_specs=_out_specs(tile_b, l, max_hops),
+        out_shape=_out_shapes(b, l, max_hops),
+        scratch_shapes=_stream_scratch(n_chunk, adj.shape[1], codes.shape[1]),
+        interpret=interpret,
+    )(adj, codes, tables, pool_ids, pool_d, pool_exp)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "tile_b", "n_chunk",
+                                             "interpret"))
+def beam_hops_l2_stream(adj, xn, queries, pool_ids, pool_d, pool_exp,
+                        max_hops: int, tile_b: int = 8, n_chunk: int = 2048,
+                        interpret: bool = False):
+    """`beam_hops_l2_pallas` with adj/vectors streamed from HBM through
+    the double-buffered DMA scratch; same contract and bit-identical
+    outputs, `stream_vmem_bytes` footprint."""
+    b, l = pool_ids.shape
+    n = adj.shape[0]
+    _check_tiling(b, tile_b, n, n_chunk)
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    return pl.pallas_call(
+        functools.partial(_beam_l2_stream_kernel, max_hops=max_hops, n=n,
+                          n_chunk=n_chunk),
+        grid=(b // tile_b,),
+        in_specs=[
+            any_spec,
+            any_spec,
+            pl.BlockSpec((tile_b, queries.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+        ],
+        out_specs=_out_specs(tile_b, l, max_hops),
+        out_shape=_out_shapes(b, l, max_hops),
+        scratch_shapes=_stream_scratch(n_chunk, adj.shape[1], xn.shape[1]),
         interpret=interpret,
     )(adj, xn, queries, pool_ids, pool_d, pool_exp)

@@ -9,9 +9,18 @@ Two scoring modes select the operand set:
 - exact L2 (construction frontier): pass ``x`` (N, D), ``n2`` (N,)
   squared norms, and ``queries`` (B, D).
 
-backend: "pallas" (TPU), "interpret" (CPU-validated kernel), or "ref"
-(pure jnp scan, bit-identical to the unfused serve hop loop); "auto" =
-pallas on TPU else ref.
+backend:
+
+- "pallas" (TPU) / "interpret" (CPU-validated kernel): the VMEM-resident
+  program -- the corpus must fit the `vmem_bytes` budget;
+- "stream" (TPU) / "stream_interpret" (CPU-validated): the HBM-streaming
+  program -- corpus arrays stay in HBM and every gather DMA-walks them
+  in double-buffered `n_chunk` slabs (`stream_vmem_bytes` footprint,
+  independent of N).  Bit-identical to the resident program at every
+  config; the oracle for both is `beam_hops_ref`;
+- "ref": pure jnp scan, bit-identical to the unfused serve hop loop;
+- "auto": on TPU, "pallas" when the resident footprint fits
+  `vmem_budget_bytes()` else "stream"; "ref" elsewhere.
 """
 from __future__ import annotations
 
@@ -20,8 +29,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import beam_hops_adc_pallas, beam_hops_l2_pallas
+from .kernel import (beam_hops_adc_pallas, beam_hops_adc_stream,
+                     beam_hops_l2_pallas, beam_hops_l2_stream, fits_vmem)
 from .ref import beam_hops_ref
+
+BACKENDS = ("auto", "pallas", "interpret", "ref", "stream",
+            "stream_interpret")
 
 
 def _pad_rows(a, mult: int, fill=0):
@@ -45,35 +58,47 @@ def beam_hops(adj, pool_ids, pool_d, pool_exp, max_hops: int,
     bool, hops (B,) int32, trace_ids (B, max_hops) int32, trace_d
     (B, max_hops) f32, next_id (B,) int32, done (B,) bool).
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"beam_hops backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
     mode = "adc" if codes is not None else "l2"
+    nc = min(n_chunk, max(adj.shape[0], 128))
     if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+        if jax.default_backend() == "tpu":
+            dims = (dict(m=codes.shape[1], k=tables.shape[2])
+                    if mode == "adc" else dict(d=x.shape[1]))
+            fits = fits_vmem(adj.shape[0], adj.shape[1],
+                             l=pool_ids.shape[1], max_hops=max_hops,
+                             tile_b=tile_b, n_chunk=nc, **dims)
+            backend = "pallas" if fits else "stream"
+        else:
+            backend = "ref"
     if backend == "ref":
         return beam_hops_ref(adj, pool_ids, pool_d, pool_exp, max_hops,
                              mode=mode, tables=tables, codes=codes,
                              x=x, n2=n2, queries=queries)
 
     b0 = pool_ids.shape[0]
-    nc = min(n_chunk, max(adj.shape[0], 128))
     adj_p = _pad_rows(adj.astype(jnp.float32), nc, fill=-1)
     pids = _pad_rows(pool_ids.astype(jnp.float32), tile_b, fill=-1)
     pd = _pad_rows(pool_d.astype(jnp.float32), tile_b, fill=jnp.inf)
     pexp = _pad_rows(pool_exp.astype(jnp.float32), tile_b)
-    interpret = backend == "interpret"
+    interpret = backend in ("interpret", "stream_interpret")
+    stream = backend in ("stream", "stream_interpret")
     if mode == "adc":
-        out = beam_hops_adc_pallas(
-            adj_p, _pad_rows(codes.astype(jnp.float32), nc),
-            _pad_rows(tables.astype(jnp.float32), tile_b),
-            pids, pd, pexp, max_hops, tile_b=tile_b, n_chunk=nc,
-            interpret=interpret)
+        fn = beam_hops_adc_stream if stream else beam_hops_adc_pallas
+        out = fn(adj_p, _pad_rows(codes.astype(jnp.float32), nc),
+                 _pad_rows(tables.astype(jnp.float32), tile_b),
+                 pids, pd, pexp, max_hops, tile_b=tile_b, n_chunk=nc,
+                 interpret=interpret)
     else:
         xn = jnp.concatenate(
             [x.astype(jnp.float32), n2.astype(jnp.float32)[:, None]], axis=1)
-        out = beam_hops_l2_pallas(
-            adj_p, _pad_rows(xn, nc),
-            _pad_rows(queries.astype(jnp.float32), tile_b),
-            pids, pd, pexp, max_hops, tile_b=tile_b, n_chunk=nc,
-            interpret=interpret)
+        fn = beam_hops_l2_stream if stream else beam_hops_l2_pallas
+        out = fn(adj_p, _pad_rows(xn, nc),
+                 _pad_rows(queries.astype(jnp.float32), tile_b),
+                 pids, pd, pexp, max_hops, tile_b=tile_b, n_chunk=nc,
+                 interpret=interpret)
     ids, d, exp, hops, tid, td, nxt, done = out
     return (ids[:b0], d[:b0], exp[:b0].astype(bool), hops[:b0, 0],
             tid[:b0], td[:b0], nxt[:b0, 0], done[:b0, 0].astype(bool))

@@ -27,7 +27,11 @@ lifetime of the server:
   Pallas program (`repro.kernels.beam_fused`: frontier select, one-hot
   adjacency/code gathers, inlined rowwise ADC, and a sort-free ranked pool
   merge per hop) -- bit-identical pool ids by construction, no per-hop
-  HBM round-trip.  The unfused path stays as the oracle, its per-stage
+  HBM round-trip.  `fused_stream*` keeps the corpus in HBM and streams it
+  through double-buffered DMA slabs, so one engine serves shards larger
+  than VMEM (bit-identical to the resident fused path); `backend="auto"`
+  picks resident vs streaming on TPU via the `beam_fused.vmem_bytes`
+  estimator.  The unfused path stays as the oracle, its per-stage
   kernels (`pq_adc`, `pq_adc_rowwise`) dispatched on the same backend knob.
 - **Exact re-rank** gathers the raw vectors of each row's top `rerank` pool
   entries and merges through `repro.kernels.l2_topk.l2_topk_rowwise`.
@@ -52,13 +56,45 @@ import numpy as np
 
 from repro.build.pool import pool_merge as _pool_merge
 from repro.core.pq import adc_tables as _adc_tables
+from repro.kernels import beam_fused
 from repro.kernels.beam_fused.ops import beam_hops
 from repro.kernels.l2_topk.ops import l2_topk_rowwise
 from repro.kernels.pq_adc.ops import pq_adc, pq_adc_rowwise
 
-# backend -> the pq_adc/beam_hops backend every stage dispatches on
+# backend -> the beam_hops backend the fused hop loop dispatches on
 _FUSED_INNER = {"fused": "auto", "fused_pallas": "pallas",
-                "fused_interpret": "interpret", "fused_ref": "ref"}
+                "fused_interpret": "interpret", "fused_ref": "ref",
+                "fused_stream": "stream",
+                "fused_stream_interpret": "stream_interpret"}
+# the streaming modes only exist for the hop loop; per-stage kernels
+# (pq_adc entry scoring) fall back to the matching resident backend
+_STAGE_INNER = {"stream": "pallas", "stream_interpret": "interpret"}
+
+
+def resolve_backend(backend: str, *, n: int, r: int, m: int, k: int = 256,
+                    l: int = 64, max_hops: int = 32, tile_b: int = 8,
+                    n_chunk: int = 2048, platform: Optional[str] = None,
+                    budget: Optional[int] = None) -> str:
+    """Resolve `EngineConfig.backend="auto"` to a concrete backend.
+
+    On CPU/GPU: the unfused jnp path ("ref") -- zero behavior change for
+    hosts without a TPU.  On TPU: the fused hop loop, VMEM-resident
+    ("fused") when `beam_fused.vmem_bytes` fits the budget, HBM-streaming
+    ("fused_stream") when the shard is too large to be VMEM-resident.
+    Non-"auto" values pass through untouched.  Every value this returns
+    is either "ref" or a `_FUSED_INNER` key, so auto can never fall
+    through to an unresolvable backend (pinned by
+    tests/test_serve_engine.py).
+    """
+    if backend != "auto":
+        return backend
+    if platform is None:
+        platform = jax.default_backend()
+    if platform != "tpu":
+        return "ref"
+    fits = beam_fused.fits_vmem(n, r, m=m, k=k, l=l, max_hops=max_hops,
+                                tile_b=tile_b, n_chunk=n_chunk, budget=budget)
+    return "fused" if fits else "fused_stream"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +105,11 @@ class EngineConfig:
     rerank: Optional[int] = None   # pool prefix reranked exactly (None = l)
     n_entry_cands: int = 256  # entry candidate pool scored by pq_adc
     # kernel backend, reaching entry scoring AND the hop loop:
-    #   "auto"             fused kernel on TPU, unfused jnp ("ref") on CPU
+    #   "auto"             on TPU the fused kernel -- VMEM-resident when
+    #                      `beam_fused.vmem_bytes` fits the budget,
+    #                      HBM-streaming ("fused_stream") when the shard
+    #                      is larger than VMEM (see `resolve_backend`);
+    #                      unfused jnp ("ref") on CPU
     #   "pallas"/"interpret"/"ref"   unfused hop loop; per-stage kernels
     #                      (pq_adc entry scoring, pq_adc_rowwise neighbor
     #                      scoring) on the named pq_adc backend
@@ -77,6 +117,9 @@ class EngineConfig:
     #                      (repro.kernels.beam_fused; auto inner backend)
     #   "fused_pallas"/"fused_interpret"/"fused_ref"   fused loop pinned
     #                      to one beam_hops backend (parity/CI)
+    #   "fused_stream"/"fused_stream_interpret"   the HBM-streaming fused
+    #                      loop (double-buffered DMA corpus slabs;
+    #                      bit-identical pools to the resident fused path)
     backend: str = "auto"
 
 
@@ -98,14 +141,16 @@ def batched_search(x, adj, codes, codebooks, entry_cands, entry_codes,
     """
     b = queries.shape[0]
     queries = queries.astype(jnp.float32)
-    if backend == "auto" and jax.default_backend() == "tpu":
-        backend = "fused"
+    backend = resolve_backend(backend, n=adj.shape[0], r=adj.shape[1],
+                              m=codes.shape[1], k=codebooks.shape[1],
+                              l=l, max_hops=max_hops)
     fused = backend in _FUSED_INNER
     inner = _FUSED_INNER.get(backend, backend)
+    stage = _STAGE_INNER.get(inner, inner)
     tables = _adc_tables(queries, codebooks)               # (B, M, K)
 
     # --- query-sensitive entry selection: pq_adc over the candidate pool
-    ed = pq_adc(tables, entry_codes, backend=inner)        # (B, E)
+    ed = pq_adc(tables, entry_codes, backend=stage)        # (B, E)
     seed_neg, seed_idx = jax.lax.top_k(-ed, n_entry)
     seed_ids = entry_cands[seed_idx].astype(jnp.int32)     # (B, n_entry)
 

@@ -168,6 +168,107 @@ def test_beam_hops_exhausts_and_reports_done():
     assert (tail == -1).all()
 
 
+# --- streaming mode: HBM-resident corpus, double-buffered DMA gathers --------
+
+def test_beam_hops_stream_interpret_matches_ref_adc():
+    adj, x, codes, tables, _, pi, pd, pe = _graph()
+    ref = beam_hops_ref(adj, pi, pd, pe, 6, mode="adc",
+                        tables=tables, codes=codes)
+    out = beam_hops(adj, pi, pd, pe, 6, tables=tables, codes=codes,
+                    backend="stream_interpret", tile_b=4, n_chunk=128)
+    _assert_hops_match(ref, out)
+
+
+def test_beam_hops_stream_interpret_matches_ref_l2():
+    adj, x, codes, tables, queries, pi, pd, pe = _graph()
+    n2 = jnp.sum(x * x, axis=1)
+    ref = beam_hops_ref(adj, pi, pd, pe, 6, mode="l2",
+                        x=x, n2=n2, queries=queries)
+    out = beam_hops(adj, pi, pd, pe, 6, x=x, n2=n2, queries=queries,
+                    backend="stream_interpret", tile_b=4, n_chunk=128)
+    _assert_hops_match(ref, out)
+
+
+@pytest.mark.parametrize("n_chunk", (64, 256))
+def test_beam_hops_stream_bitwise_matches_resident(n_chunk):
+    """Streaming must be *bit-identical* to the resident program at every
+    slab size: both walk identical chunk contents in identical order and
+    the one-hot contraction's 0.0 contributions are exact, so the DMA
+    chunking can never move a single bit of ids or dists."""
+    adj, x, codes, tables, queries, pi, pd, pe = _graph(n=256)
+    n2 = jnp.sum(x * x, axis=1)
+    kw = dict(tile_b=4)
+    res = beam_hops(adj, pi, pd, pe, 6, tables=tables, codes=codes,
+                    backend="interpret", n_chunk=128, **kw)
+    stream = beam_hops(adj, pi, pd, pe, 6, tables=tables, codes=codes,
+                       backend="stream_interpret", n_chunk=n_chunk, **kw)
+    for got, want in zip(stream, res):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    res = beam_hops(adj, pi, pd, pe, 6, x=x, n2=n2, queries=queries,
+                    backend="interpret", n_chunk=128, **kw)
+    stream = beam_hops(adj, pi, pd, pe, 6, x=x, n2=n2, queries=queries,
+                       backend="stream_interpret", n_chunk=n_chunk, **kw)
+    for got, want in zip(stream, res):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_beam_hops_rejects_unknown_backend():
+    adj, x, codes, tables, _, pi, pd, pe = _graph()
+    with pytest.raises(ValueError, match="backend"):
+        beam_hops(adj, pi, pd, pe, 2, tables=tables, codes=codes,
+                  backend="bogus")
+
+
+def test_kernel_tiling_errors_name_offending_dims():
+    """The raw kernels (callable without the ops-layer padding) must raise
+    ValueErrors naming the offending dims, not bare asserts."""
+    from repro.kernels.beam_fused import (beam_hops_adc_pallas,
+                                          beam_hops_adc_stream)
+    adj, x, codes, tables, _, pi, pd, pe = _graph()   # b=5, n=300
+    f32 = lambda a: jnp.asarray(a, jnp.float32)       # noqa: E731
+    args = (f32(adj), f32(codes), f32(tables), f32(pi), f32(pd), f32(pe))
+    for fn in (beam_hops_adc_pallas, beam_hops_adc_stream):
+        with pytest.raises(ValueError, match=r"b=5 .* tile_b=4"):
+            fn(*args, 2, tile_b=4, n_chunk=300, interpret=True)
+        with pytest.raises(ValueError, match=r"n=300 .* n_chunk=128"):
+            fn(*args, 2, tile_b=5, n_chunk=128, interpret=True)
+
+
+def test_vmem_estimator_sanity():
+    from repro.kernels import beam_fused as bf
+    small = bf.vmem_bytes(4096, 32, m=16)
+    big = bf.vmem_bytes(1_000_000, 32, m=16)
+    assert small < big
+    # resident is corpus-dominated: N * (R + M) f32 is a hard lower bound
+    assert big > 1_000_000 * (32 + 16) * 4
+    # streaming footprint is independent of N (that is the whole point)
+    s_small = bf.stream_vmem_bytes(4096, 32, m=16, n_chunk=1024)
+    s_big = bf.stream_vmem_bytes(1_000_000, 32, m=16, n_chunk=1024)
+    assert s_small == s_big
+    assert s_big < big
+    # fits_vmem is the exact <= budget comparison
+    assert bf.fits_vmem(1000, 8, m=4, budget=bf.vmem_bytes(1000, 8, m=4))
+    assert not bf.fits_vmem(1000, 8, m=4,
+                            budget=bf.vmem_bytes(1000, 8, m=4) - 1)
+    # l2 mode sizes with d=; exactly one of m=/d= is required
+    assert bf.vmem_bytes(1000, 8, d=16) > bf.stream_vmem_bytes(
+        1000, 8, d=16, n_chunk=128)
+    with pytest.raises(ValueError, match="exactly one"):
+        bf.vmem_bytes(1000, 8)
+    with pytest.raises(ValueError, match="exactly one"):
+        bf.vmem_bytes(1000, 8, m=4, d=16)
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    from repro.kernels import beam_fused as bf
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "12345")
+    assert bf.vmem_budget_bytes() == 12345
+    assert not bf.fits_vmem(4096, 32, m=16)          # ~12 kB budget
+    monkeypatch.delenv("REPRO_VMEM_BUDGET")
+    assert bf.vmem_budget_bytes() == 16 * 2 ** 20
+    assert bf.fits_vmem(4096, 32, m=16)
+
+
 # --- layer 3: engine + frontier parity ---------------------------------------
 
 @pytest.fixture(scope="module")
@@ -201,6 +302,20 @@ def test_engine_fused_interpret_bitwise_vs_unfused(built):
     e0 = BatchedANNEngine.from_index(idx, EngineConfig(backend="ref", **cfg))
     e1 = BatchedANNEngine.from_index(
         idx, EngineConfig(backend="fused_interpret", **cfg))
+    i0, d0 = e0.search_batch(ds.queries, 5)
+    i1, d1 = e1.search_batch(ds.queries, 5)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+
+
+def test_engine_fused_stream_interpret_bitwise_vs_unfused(built):
+    """The HBM-streaming Pallas program (interpret mode on CPU) drives the
+    whole hop loop and must land on the same pools as the unfused scan."""
+    ds, idx = built
+    cfg = dict(l=32, max_hops=16)
+    e0 = BatchedANNEngine.from_index(idx, EngineConfig(backend="ref", **cfg))
+    e1 = BatchedANNEngine.from_index(
+        idx, EngineConfig(backend="fused_stream_interpret", **cfg))
     i0, d0 = e0.search_batch(ds.queries, 5)
     i1, d1 = e1.search_batch(ds.queries, 5)
     np.testing.assert_array_equal(i0, i1)
@@ -259,6 +374,25 @@ def test_frontier_fused_matches_batched_width1(built):
                                 batch=64, backend="fused_ref")
     np.testing.assert_array_equal(ids_b, ids_f)
     np.testing.assert_allclose(d_b, d_f, rtol=1e-5, atol=1e-4)
+
+
+def test_frontier_fused_stream_bitwise_matches_fused_interpret(built):
+    """The streaming frontier runs the same Pallas hop program through the
+    DMA gathers: bit-identical pools to the resident interpret frontier."""
+    from repro.build.frontier import frontier_pools
+    from repro.core.distances import knn_graph, medoid
+    ds, _ = built
+    x = ds.base
+    knn = knn_graph(x, 12)
+    med = medoid(x)
+    nodes = np.arange(len(x))
+    kw = dict(ef=24, max_hops=8, batch=64)
+    ids_i, d_i = frontier_pools(x, knn, [med], nodes,
+                                backend="fused_interpret", **kw)
+    ids_s, d_s = frontier_pools(x, knn, [med], nodes,
+                                backend="fused_stream_interpret", **kw)
+    np.testing.assert_array_equal(ids_i, ids_s)
+    np.testing.assert_array_equal(d_i, d_s)
 
 
 def test_build_with_fused_frontier(built):

@@ -101,6 +101,65 @@ def test_delta_delete_validates_and_insert_checks_dim(base_index):
         delta.insert(np.zeros(delta.d + 1, np.float32))
 
 
+def test_overlay_pressure_warns_once_and_rearms(small_corpus, base_index,
+                                                caplog):
+    """The pressure guard fires a single warning when inserts + tombstones
+    cross `warn_fraction` of the base, stays quiet while pressure
+    persists, and re-arms only when the overlay shrinks (fresh layer)."""
+    import logging
+    ds = small_corpus
+    n_base = len(ds.base)
+    delta = DeltaLayer(base_index,
+                       DeltaParams(r=16, ef=48, warn_fraction=4.5 / n_base))
+    rng = np.random.default_rng(5)
+    vecs = (ds.base[rng.integers(0, n_base, 6)]
+            + 0.02 * rng.standard_normal((6, ds.base.shape[1]))
+            .astype(np.float32))
+    with caplog.at_level(logging.WARNING, logger="repro.index.delta.layer"):
+        delta.insert_batch(vecs[:3])            # 3/n_base: below threshold
+        assert not delta.overlay_pressure
+        assert caplog.records == []
+        delta.delete(0)
+        delta.delete(1)                         # 5 writes: crossed
+        assert delta.overlay_pressure
+        assert delta.overlay_fraction == pytest.approx(5 / n_base)
+        warns = [r for r in caplog.records if "overlay" in r.message]
+        assert len(warns) == 1
+        assert f"{n_base}-point base" in warns[0].message
+        delta.insert_batch(vecs[3:])            # still over: no re-warn
+        assert len([r for r in caplog.records
+                    if "overlay" in r.message]) == 1
+    # a fresh layer (what consolidation swaps in) starts re-armed
+    fresh = DeltaLayer(base_index, DeltaParams(r=16, warn_fraction=0.25))
+    assert fresh.overlay_fraction == 0.0 and not fresh.overlay_pressure
+
+
+def test_fresh_service_stats(small_corpus, base_index, tmp_path):
+    svc = FreshService(str(tmp_path / "depot"), params=_PARAMS,
+                       delta_params=DeltaParams(r=16, ef=48,
+                                                warn_fraction=0.02))
+    svc.bootstrap(index=base_index)
+    n0 = len(small_corpus.base)
+    s = svc.stats()
+    assert s["n_base"] == n0 and s["n_delta"] == 0
+    assert s["n_tombstones"] == 0 and s["n_live"] == n0
+    assert s["overlay_fraction"] == 0.0 and not s["overlay_pressure"]
+    assert s["warn_fraction"] == pytest.approx(0.02)
+    assert s["generation"] == 0
+    rng = np.random.default_rng(9)
+    m = int(np.ceil(0.02 * n0)) + 2
+    svc.insert_batch(small_corpus.base[:m]
+                     + 0.01 * rng.standard_normal(
+                         (m, small_corpus.base.shape[1])).astype(np.float32))
+    svc.delete(0)
+    s = svc.stats()
+    assert s["n_delta"] == m and s["n_tombstones"] == 1
+    assert s["n_live"] == n0 + m - 1
+    assert s["overlay_fraction"] == pytest.approx((m + 1) / n0)
+    assert s["overlay_pressure"]
+    assert s["overlay_memory_bytes"] >= svc.delta.memory_bytes()
+
+
 # ---------------------------------------------------------------------------
 # 2. unified base+delta engine (host + batched paths)
 # ---------------------------------------------------------------------------

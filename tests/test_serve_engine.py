@@ -177,6 +177,56 @@ def test_batched_submission_bit_identical_to_per_read(built, seed):
         idx.configure_io(qd=1)    # module-scoped fixture: restore defaults
 
 
+def test_auto_backend_dispatch_pinned():
+    """`EngineConfig.backend="auto"` resolution is load-bearing: CPU hosts
+    must land on the unfused jnp path (zero behavior change without a
+    TPU), TPU hosts on the fused loop -- VMEM-resident when the shard
+    fits `beam_fused.vmem_bytes`, HBM-streaming when it does not -- and
+    every resolution target must be dispatchable by `batched_search`."""
+    from repro.kernels import beam_fused
+    from repro.serve.ann_engine import (_FUSED_INNER, _STAGE_INNER,
+                                        resolve_backend)
+    shape = dict(n=4096, r=32, m=16, k=256, l=64, max_hops=32)
+    # non-auto values pass through untouched
+    for b in ("ref", "fused_ref", "fused_stream"):
+        assert resolve_backend(b, **shape) == b
+    # CPU/GPU hosts: the unfused jnp path, regardless of shard size
+    assert resolve_backend("auto", platform="cpu", **shape) == "ref"
+    assert resolve_backend("auto", platform="gpu",
+                           **dict(shape, n=10**7)) == "ref"
+    # TPU: resident fused when the estimator fits the budget...
+    assert beam_fused.fits_vmem(4096, 32, m=16)
+    assert resolve_backend("auto", platform="tpu", **shape) == "fused"
+    # ...streaming when the shard exceeds it (by size or by budget)
+    assert not beam_fused.fits_vmem(10**7, 32, m=16)
+    assert resolve_backend("auto", platform="tpu",
+                           **dict(shape, n=10**7)) == "fused_stream"
+    assert resolve_backend("auto", platform="tpu", budget=1024,
+                           **shape) == "fused_stream"
+    # every resolution target reaches a dispatchable fused inner backend
+    for resolved in ("fused", "fused_stream"):
+        assert resolved in _FUSED_INNER
+    assert set(_FUSED_INNER.values()) <= set(beam_fused.BACKENDS)
+    # the streaming hop backends map to resident per-stage kernels
+    assert set(_STAGE_INNER) <= set(_FUSED_INNER.values())
+    assert set(_STAGE_INNER.values()) == {"pallas", "interpret"}
+
+
+def test_auto_backend_on_cpu_bitwise_equals_ref(built):
+    """On a CPU host auto must be a no-op relative to backend="ref"."""
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("CPU-host behavior pin")
+    ds, idx = built
+    cfg = dict(l=32, max_hops=16)
+    e0 = BatchedANNEngine.from_index(idx, EngineConfig(backend="ref", **cfg))
+    e1 = BatchedANNEngine.from_index(idx, EngineConfig(backend="auto", **cfg))
+    i0, d0 = e0.search_batch(ds.queries, K)
+    i1, d1 = e1.search_batch(ds.queries, K)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+
+
 def test_build_copies_params_no_cross_index_leak(tiny_points):
     """configure_io on one index must not leak knobs into other indexes
     built from the same (possibly default) params object."""
